@@ -1,0 +1,92 @@
+"""Benchmark entry point: one block per paper table/figure + the
+beyond-paper rows + a micro-benchmark of the SL step and kernels.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _timeit(fn, *args, n=3, warmup=1, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    return (time.time() - t0) / n * 1e6, out      # us/call
+
+
+def micro_benchmarks():
+    """us/call for the SL step + each kernel's jnp path (CPU; the numbers
+    are for regression tracking, not TPU performance claims)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.sl_step import autoencoder_adapter, make_sl_step
+    from repro.data.synthetic import ImageryShards
+    from repro.kernels import ops
+
+    print("== micro-benchmarks (CPU reference timings) ==")
+    print("name,us_per_call,derived")
+    rng = np.random.default_rng(0)
+
+    ad = autoencoder_adapter(cut=5, img=32)
+    pa, pb = ad.init(jax.random.key(0))
+    batch = jax.tree.map(jnp.asarray, ImageryShards(img=32, batch=4)
+                         .batch_at(0, 0))
+    step = make_sl_step(ad)
+    us, _ = _timeit(lambda: step(pa, pb, batch))
+    print(f"sl_step_autoencoder,{us:.0f},loss+both-grads")
+
+    q = jnp.asarray(rng.standard_normal((1, 8, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, use_pallas=False))
+    us, _ = _timeit(lambda: jax.block_until_ready(f(q, k, v)))
+    flops = 4 * 8 * 512 * 512 / 2 * 64
+    print(f"flash_attention_512,{us:.0f},{flops/us/1e3:.1f}GFLOP/s")
+
+    x = jnp.asarray(rng.standard_normal((1, 512, 4, 64)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((1, 512, 4))))
+    alog = jnp.asarray(rng.standard_normal(4)) * 0.5
+    b = jnp.asarray(rng.standard_normal((1, 512, 16)), jnp.float32)
+    g = jax.jit(lambda *a: ops.mamba_scan(*a, chunk=128, use_pallas=False))
+    us, _ = _timeit(lambda: jax.block_until_ready(g(x, dt, alog, b, b)[0]))
+    print(f"mamba_scan_512,{us:.0f},chunked-ssd")
+
+    xq = jnp.asarray(rng.standard_normal((4096, 512)), jnp.float32)
+    h = jax.jit(lambda t: ops.quantize_boundary(t, use_pallas=False))
+    us, _ = _timeit(lambda: jax.block_until_ready(h(xq)[0]))
+    print(f"split_quant_4096x512,{us:.0f},{xq.nbytes/us/1e3:.2f}GB/s")
+
+
+def main() -> None:
+    from benchmarks import paper_tables
+
+    t0 = time.time()
+    results = paper_tables.run_all()
+    micro_benchmarks()
+
+    os.makedirs("results", exist_ok=True)
+
+    def _clean(o):
+        if isinstance(o, dict):
+            return {k: _clean(v) for k, v in o.items()}
+        if isinstance(o, (list, tuple)):
+            return [_clean(v) for v in o]
+        if isinstance(o, (float, int, str, bool)) or o is None:
+            return o
+        return float(o) if hasattr(o, "__float__") else str(o)
+
+    with open("results/bench.json", "w") as f:
+        json.dump(_clean(results), f, indent=1)
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s "
+          f"-> results/bench.json")
+
+
+if __name__ == "__main__":
+    main()

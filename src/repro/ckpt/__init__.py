@@ -1,0 +1,3 @@
+"""Checkpointing: atomic pytree save/restore with integrity hashes."""
+from repro.ckpt.checkpoint import (latest_step, restore, save,
+                                   save_handoff, restore_handoff)

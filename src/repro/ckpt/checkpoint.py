@@ -1,0 +1,143 @@
+"""Atomic, integrity-checked pytree checkpoints (npz + msgpack manifest).
+
+Fault-tolerance contract (the 1000-node story):
+  * writes go to ``<dir>/tmp.<step>.<pid>`` then os.replace() — a crash
+    mid-write never corrupts the latest checkpoint;
+  * every array is sha256-hashed into the manifest; restore verifies
+    before returning, so a torn/bit-rotted file fails loudly;
+  * ``latest_step`` scans for the newest *complete* checkpoint — restart
+    after failure is "call restore(latest_step())";
+  * the SL ring handoff reuses the same machinery (``save_handoff``):
+    the segment-A weights a satellite ships over the ISL *are* a
+    checkpoint, so a satellite loss mid-pass degrades to "next satellite
+    restores the last handoff" — the paper's skip-and-continue policy.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.utils.treeutil import tree_flatten_with_names
+
+_CKPT_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for name, leaf in tree_flatten_with_names(tree):
+        flat[name] = np.asarray(leaf)
+    return flat
+
+
+def _manifest(flat: Dict[str, np.ndarray], meta: Optional[Dict]) -> bytes:
+    entries = {}
+    for k, v in flat.items():
+        entries[k] = {
+            "shape": list(v.shape),
+            "dtype": str(v.dtype),
+            "sha256": hashlib.sha256(np.ascontiguousarray(v).tobytes())
+            .hexdigest(),
+        }
+    return msgpack.packb({"arrays": entries, "meta": meta or {}})
+
+
+def save(directory: str, step: int, tree, meta: Optional[Dict] = None) -> str:
+    """Atomically write checkpoint ``<directory>/step_<step>``."""
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    final = os.path.join(directory, f"step_{step}")
+    tmp = tempfile.mkdtemp(prefix=f".tmp.{step}.", dir=directory)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(_manifest(flat, meta))
+        if os.path.isdir(final):
+            # never overwrite silently; keep the existing complete ckpt
+            import shutil
+            shutil.rmtree(tmp)
+            return final
+        os.replace(tmp, final)
+    except BaseException:
+        import shutil
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def _load_verified(path: str) -> Tuple[Dict[str, np.ndarray], Dict]:
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    for k, info in manifest["arrays"].items():
+        if k not in flat:
+            raise IOError(f"checkpoint {path}: missing array {k}")
+        h = hashlib.sha256(np.ascontiguousarray(flat[k]).tobytes()).hexdigest()
+        if h != info["sha256"]:
+            raise IOError(f"checkpoint {path}: integrity failure on {k}")
+    return flat, manifest.get("meta", {})
+
+
+def restore(directory: str, step: int, like) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays)."""
+    path = os.path.join(directory, f"step_{step}")
+    flat, meta = _load_verified(path)
+    names = [n for n, _ in tree_flatten_with_names(like)]
+    leaves, treedef = jax.tree.flatten(like)
+    out = []
+    for name, leaf in zip(names, leaves):
+        if name not in flat:
+            raise IOError(f"checkpoint {path}: missing {name}")
+        arr = flat[name]
+        want = np.asarray(leaf)
+        if tuple(arr.shape) != tuple(want.shape):
+            raise IOError(f"{name}: shape {arr.shape} != {want.shape}")
+        out.append(jnp.asarray(arr, dtype=want.dtype))
+    return jax.tree.unflatten(treedef, out), meta
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for entry in os.listdir(directory):
+        m = _CKPT_RE.match(entry)
+        if m and os.path.exists(os.path.join(directory, entry,
+                                             "manifest.msgpack")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+# --------------------------------------------------------------------------
+# SL ring handoff = checkpoint of the satellite segment.
+# --------------------------------------------------------------------------
+
+def save_handoff(directory: str, pass_idx: int, segment_tree,
+                 meta: Optional[Dict] = None) -> Tuple[str, int]:
+    """Persist the segment-A weights shipped over the ISL; returns
+    (path, payload_bytes) — the bytes are exactly the paper's D_ISL."""
+    flat = _flatten(segment_tree)
+    payload = sum(v.nbytes for v in flat.values())
+    path = save(directory, pass_idx, segment_tree,
+                meta=dict(meta or {}, payload_bytes=payload))
+    return path, payload
+
+
+def restore_handoff(directory: str, like, pass_idx: Optional[int] = None
+                    ) -> Tuple[Any, Dict, int]:
+    """Restore the most recent (or given) handoff; returns
+    (tree, meta, pass_idx). Raises FileNotFoundError if none exists."""
+    step = pass_idx if pass_idx is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no handoff in {directory}")
+    tree, meta = restore(directory, step, like)
+    return tree, meta, step

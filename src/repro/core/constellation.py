@@ -1,0 +1,236 @@
+"""The orbital-ring scheduler: cyclical SL training across N satellites.
+
+Implements the paper's time-window protocol end to end:
+
+  pass k: satellite s = ring[k mod N] is visible for T_pass seconds.
+    1. resource allocation: solve problem (13) for this pass's split
+       costs (exact dual bisection, core/resource_opt); if infeasible,
+       shed batch fraction (straggler mitigation).
+    2. run real SL train steps (core/sl_step) on the satellite's local
+       non-IID shard until the allocated item budget is consumed.
+    3. account energy per eq. (11) with the *measured* boundary payloads.
+    4. hand segment A to the next satellite over the ISL — implemented
+       as an integrity-checked checkpoint (ckpt.save_handoff), so the
+       handoff doubles as the fault-tolerance point.
+
+Fault / policy model (the paper's "energy-constrained satellites may
+skip" plus the 1000-node hardening):
+  * per-satellite battery with solar recharge; below reserve => skip
+    pass (ground trains nothing; segment forwarded unchanged).
+  * random satellite failure => ring skips it; the successor restores
+    the last handoff checkpoint (no training lost beyond one pass).
+  * elastic membership: join/leave events re-size the ring between
+    passes (T_pass is per-satellite and unchanged; d_ISL shifts with N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import resource_opt
+from repro.core.energy import PassBudget, SplitCosts
+from repro.core.orbits import OrbitalPlane
+from repro.core.sl_step import SplitAdapter, make_sl_step
+from repro.train.optimizer import SGDState, sgd_init, sgd_update
+from repro.utils.treeutil import tree_bytes
+
+
+@dataclasses.dataclass
+class SatelliteState:
+    sat_id: int
+    battery_j: float
+    alive: bool = True
+    passes_served: int = 0
+    energy_spent_j: float = 0.0
+
+
+@dataclasses.dataclass
+class PassRecord:
+    pass_idx: int
+    sat_id: int
+    action: str                       # trained | skipped_energy | failed | shed
+    loss: Optional[float] = None
+    kept_fraction: float = 1.0
+    e_total_j: float = 0.0
+    e_proc_j: float = 0.0
+    e_comm_j: float = 0.0
+    e_isl_j: float = 0.0
+    t_total_s: float = 0.0
+    d_isl_bits: float = 0.0
+    n_items: float = 0.0
+
+
+@dataclasses.dataclass
+class ConstellationConfig:
+    n_passes: int = 25
+    items_per_pass: float = 400.0        # Table I: images per satellite pass
+    batch_size: int = 8
+    lr: float = 1e-2
+    quantize_boundary: bool = False
+    battery_j: float = 5_000.0
+    recharge_w: float = 20.0             # solar recharge between passes
+    reserve_j: float = 100.0             # skip threshold
+    fail_prob: float = 0.0
+    seed: int = 0
+    handoff_dir: Optional[str] = None    # persist handoffs (fault tolerance)
+    join_events: Dict[int, int] = dataclasses.field(default_factory=dict)
+    leave_events: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+
+class ConstellationSim:
+    """Round-robin online SL over the orbital ring, training a real model."""
+
+    def __init__(self, adapter: SplitAdapter, budget: PassBudget,
+                 data_for_sat: Callable[[int, int], Dict],
+                 cfg: ConstellationConfig = ConstellationConfig()):
+        self.adapter = adapter
+        self.budget = budget
+        self.cfg = cfg
+        self.data_for_sat = data_for_sat
+        self.rng = np.random.default_rng(cfg.seed)
+
+        pa, pb = adapter.init(jax.random.key(cfg.seed))
+        self.params_a, self.params_b = pa, pb
+        self.opt_a: SGDState = sgd_init(pa)
+        self.opt_b: SGDState = sgd_init(pb)
+        self.step = make_sl_step(adapter,
+                                 quantize_boundary=cfg.quantize_boundary)
+
+        n = budget.plane.n_sats
+        self.sats: List[SatelliteState] = [
+            SatelliteState(i, cfg.battery_j) for i in range(n)]
+        self.records: List[PassRecord] = []
+        self._batch_idx = 0
+
+    # ------------------------------------------------------------- internals
+    def _ring(self) -> List[SatelliteState]:
+        return [s for s in self.sats if s.alive]
+
+    def _measured_costs(self, dtx_bits_per_item: float) -> SplitCosts:
+        base = self.adapter.costs()
+        d_isl = 8.0 * tree_bytes(self.params_a)       # measured handoff bytes
+        return dataclasses.replace(base, dtx_bits=dtx_bits_per_item,
+                                   d_isl_bits=d_isl)
+
+    def _solve_pass(self, costs: SplitCosts):
+        return resource_opt.solve_with_shedding(self.budget, costs)
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> List[PassRecord]:
+        cfg = self.cfg
+        for k in range(cfg.n_passes):
+            # elastic membership
+            if k in cfg.join_events:
+                for _ in range(cfg.join_events[k]):
+                    self.sats.append(SatelliteState(len(self.sats),
+                                                    cfg.battery_j))
+            if k in cfg.leave_events:
+                sid = cfg.leave_events[k] % len(self.sats)
+                self.sats[sid].alive = False
+
+            ring = self._ring()
+            sat = ring[k % len(ring)]
+            rec = self._run_pass(k, sat)
+            self.records.append(rec)
+            # solar recharge for everyone between passes
+            for s in self._ring():
+                s.battery_j = min(cfg.battery_j,
+                                  s.battery_j + cfg.recharge_w
+                                  * self.budget.plane.pass_duration_s)
+        return self.records
+
+    def _run_pass(self, k: int, sat: SatelliteState) -> PassRecord:
+        cfg = self.cfg
+
+        # random failure: the ring continues; handoff checkpoint survives
+        if self.rng.random() < cfg.fail_prob:
+            sat.alive = False
+            if cfg.handoff_dir is not None:
+                from repro import ckpt
+                try:
+                    self.params_a, _, _ = ckpt.restore_handoff(
+                        cfg.handoff_dir, self.params_a)
+                except FileNotFoundError:
+                    pass        # failed before the first handoff: keep init
+            return PassRecord(k, sat.sat_id, "failed")
+
+        # energy policy: skip the pass, forward the segment unchanged
+        if sat.battery_j < cfg.reserve_j:
+            self._handoff(k)
+            return PassRecord(k, sat.sat_id, "skipped_energy",
+                              d_isl_bits=8.0 * tree_bytes(self.params_a))
+
+        # one probe batch to measure the true boundary payload
+        batch = self.data_for_sat(sat.sat_id, self._batch_idx)
+        n_in_batch = next(iter(batch.values())).shape[0]
+        probe = self.step(self.params_a, self.params_b, batch)
+        dtx_per_item = probe.dtx_bits_down / n_in_batch
+
+        costs = self._measured_costs(dtx_per_item)
+        shed = self._solve_pass(costs)
+        alloc = shed.report.allocation
+        n_items = shed.n_items_kept
+        n_steps = max(1, int(round(n_items / n_in_batch)))
+
+        losses = []
+        self._apply(probe)
+        losses.append(float(probe.loss))
+        for _ in range(min(n_steps - 1, 16)):     # cap sim steps per pass
+            self._batch_idx += 1
+            batch = self.data_for_sat(sat.sat_id, self._batch_idx)
+            res = self.step(self.params_a, self.params_b, batch)
+            self._apply(res)
+            losses.append(float(res.loss))
+        self._batch_idx += 1
+
+        e = alloc.e_total
+        sat.battery_j -= (alloc.e_proc_sat + alloc.e_comm_down + alloc.e_isl)
+        sat.energy_spent_j += e
+        sat.passes_served += 1
+        self._handoff(k)
+
+        return PassRecord(
+            k, sat.sat_id,
+            "shed" if shed.kept_fraction < 1.0 else "trained",
+            loss=float(np.mean(losses)), kept_fraction=shed.kept_fraction,
+            e_total_j=e,
+            e_proc_j=alloc.e_proc_sat + alloc.e_proc_gs,
+            e_comm_j=alloc.e_comm_down + alloc.e_comm_up,
+            e_isl_j=alloc.e_isl, t_total_s=alloc.t_total,
+            d_isl_bits=costs.d_isl_bits, n_items=n_items)
+
+    def _apply(self, res):
+        self.params_a, self.opt_a, _ = sgd_update(
+            res.grads_a, self.opt_a, self.params_a, lr=self.cfg.lr)
+        self.params_b, self.opt_b, _ = sgd_update(
+            res.grads_b, self.opt_b, self.params_b, lr=self.cfg.lr)
+
+    def _handoff(self, k: int):
+        """Ship segment A to the successor (checkpoint == ISL payload)."""
+        if self.cfg.handoff_dir is not None:
+            from repro import ckpt
+            ckpt.save_handoff(self.cfg.handoff_dir, k, self.params_a,
+                              meta={"pass": k})
+
+    # ------------------------------------------------------------- reporting
+    def summary(self) -> Dict[str, Any]:
+        recs = self.records
+        trained = [r for r in recs if r.action in ("trained", "shed")]
+        return {
+            "passes": len(recs),
+            "trained": len(trained),
+            "skipped": sum(r.action == "skipped_energy" for r in recs),
+            "failed": sum(r.action == "failed" for r in recs),
+            "loss_first": trained[0].loss if trained else None,
+            "loss_last": trained[-1].loss if trained else None,
+            "E_total_J": sum(r.e_total_j for r in recs),
+            "E_comm_J": sum(r.e_comm_j for r in recs),
+            "E_proc_J": sum(r.e_proc_j for r in recs),
+            "E_isl_J": sum(r.e_isl_j for r in recs),
+        }

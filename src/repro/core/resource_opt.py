@@ -1,0 +1,352 @@
+"""Problem (13): per-pass energy minimization — exact solver.
+
+The paper observes problem (13) is quasiconvex and solves it "with the
+bisection method".  We make that exact (DESIGN.md §3): substituting the
+per-phase *times* as decision variables turns (13) into a separable
+convex resource-allocation problem
+
+    min   Σᵢ Eᵢ(tᵢ)
+    s.t.  Σᵢ tᵢ ≤ T_budget        (= T_pass − 2·T_prop − T_ISL)
+          tᵢ ≥ tᵢ_min             (from f ≤ f_max and p ≤ P_max)
+
+with every Eᵢ convex and strictly decreasing, so the deadline binds at
+the optimum and the KKT conditions reduce to the classic waterfilling
+form  −Eᵢ'(tᵢ) = λ  (or tᵢ = tᵢ_min where the bound binds).  We bisect
+on the dual λ — *this is the paper's bisection, applied to the dual* —
+with closed-form tᵢ(λ) for the processing phases and a scalar inner
+bisection for the Shannon-rate comm phases.
+
+Phases (i):
+    0: sat processing   E(t) = k/t²,  k = (P_p/f_max³)(nW₁/(N_c N_F))³
+    1: downlink comm    E(t) = t·(2^{c/t} − 1)/g̃,  c = n·D_tx/B
+    2: gs processing    (as 0 with W₂)
+    3: uplink comm      (as 1 — same payload per the paper)
+
+Infeasibility (Σ tᵢ_min > T_budget) is reported, and
+:func:`solve_with_shedding` implements the straggler-mitigation policy:
+shed the smallest batch fraction that restores feasibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.energy import (Allocation, PassBudget, SplitCosts,
+                               allocation_from_times)
+
+_EPS = 1e-12
+
+
+# --------------------------------------------------------------------------
+# Per-phase convex models in the time domain.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Phase:
+    """One separable term: energy(t), its negated derivative, and t_min."""
+
+    name: str
+    t_min: float
+    energy: Callable[[float], float]
+    neg_deriv: Callable[[float], float]   # −E'(t): positive, decreasing in t
+
+    def t_of_lambda(self, lam: float, t_hi: float) -> float:
+        """Solve −E'(t) = lam for t ∈ [t_min, t_hi] (monotone bisection)."""
+        lo, hi = self.t_min, t_hi
+        if self.neg_deriv(lo) <= lam:     # marginal already below λ at the bound
+            return lo
+        if self.neg_deriv(hi) >= lam:     # even at t_hi the marginal exceeds λ
+            return hi
+        for _ in range(200):
+            mid = 0.5 * (lo + hi)
+            if self.neg_deriv(mid) > lam:
+                lo = mid
+            else:
+                hi = mid
+            if hi - lo < 1e-12 * max(1.0, hi):
+                break
+        return 0.5 * (lo + hi)
+
+
+def _proc_phase(name: str, k: float, t_min: float) -> Optional[_Phase]:
+    """E(t) = k / t², −E'(t) = 2k/t³; closed-form t(λ) = (2k/λ)^{1/3}."""
+    if k <= 0.0:
+        return None
+
+    phase = _Phase(
+        name=name,
+        t_min=t_min,
+        energy=lambda t: k / (t * t),
+        neg_deriv=lambda t: 2.0 * k / (t * t * t),
+    )
+
+    # closed form overrides the generic bisection
+    def t_of_lambda(lam: float, t_hi: float, _k=k, _tmin=t_min) -> float:
+        t = (2.0 * _k / max(lam, 1e-300)) ** (1.0 / 3.0)
+        return min(max(t, _tmin), t_hi)
+
+    object.__setattr__(phase, "t_of_lambda", t_of_lambda)
+    return phase
+
+
+def _comm_phase(name: str, c_bits_per_hz: float, gain: float,
+                t_min: float) -> Optional[_Phase]:
+    """E(t) = t (2^{c/t} − 1)/g̃ with c = bits/B.
+
+    −E'(t) = [2^{c/t}((c ln2)/t − 1) + 1]/g̃, positive and decreasing.
+    Evaluated via expm1 to avoid catastrophic cancellation for small
+    c/t (the naive form loses ~1e-3 relative accuracy at u ~ 1e-6,
+    which corrupts the dual bisection — caught by the KKT-residual
+    hypothesis test).
+    """
+    if c_bits_per_hz <= 0.0:
+        return None
+    ln2 = math.log(2.0)
+
+    def energy(t: float, c=c_bits_per_hz, g=gain) -> float:
+        return t * math.expm1((c / t) * ln2) / g
+
+    def neg_deriv(t: float, c=c_bits_per_hz, g=gain) -> float:
+        u = c / t
+        ul = u * ln2
+        if ul > 500.0:                     # avoid overflow: exp regime
+            return math.exp(500.0) / g     # effectively +inf marginal
+        e = math.expm1(ul)
+        # 1 + (1+e)(ul - 1) = e*ul - (e - ul); both terms O(u^2), stable
+        return (e * ul - (e - ul)) / g
+
+    return _Phase(name=name, t_min=t_min, energy=energy, neg_deriv=neg_deriv)
+
+
+def _build_phases(budget: PassBudget, costs: SplitCosts) -> List[Optional[_Phase]]:
+    """Phases in canonical order [sat_proc, down, gs_proc, up]; None = absent."""
+    n = budget.n_items
+    d = budget.mean_distance_m
+    link = budget.link
+    gain = link.channel_gain(d)
+
+    def proc_k(dev, w):
+        nw = n * w / (dev.n_cores * dev.flops_per_cycle)
+        return dev.power_max_w / dev.f_max_hz**3 * nw**3
+
+    def proc_tmin(dev, w):
+        return dev.min_proc_time_s(w, n)
+
+    down_bits = n * costs.dtx_bits
+    up_bits = n * costs.dtx_bits
+    c_down = down_bits / link.bandwidth_hz
+    c_up = up_bits / link.bandwidth_hz
+    r_max = link.rate_bps(link.max_tx_power_w, d)
+    t_min_down = down_bits / r_max if down_bits > 0 else 0.0
+    t_min_up = up_bits / r_max if up_bits > 0 else 0.0
+
+    return [
+        _proc_phase("sat_proc", proc_k(budget.sat_device, costs.w1_flops),
+                    proc_tmin(budget.sat_device, costs.w1_flops)),
+        _comm_phase("downlink", c_down, gain, t_min_down),
+        _proc_phase("gs_proc", proc_k(budget.gs_device, costs.w2_flops),
+                    proc_tmin(budget.gs_device, costs.w2_flops)),
+        _comm_phase("uplink", c_up, gain, t_min_up),
+    ]
+
+
+# --------------------------------------------------------------------------
+# The dual-bisection (waterfilling) solver.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolveReport:
+    allocation: Allocation
+    lam: float
+    kkt_residual: float
+    iterations: int
+    phase_times: dict
+
+
+def solve(budget: PassBudget, costs: SplitCosts,
+          tol: float = 1e-10) -> SolveReport:
+    """Exact solution of problem (13) via bisection on the dual variable."""
+    phases = _build_phases(budget, costs)
+    live = [p for p in phases if p is not None]
+    t_budget = budget.time_budget_s(costs)
+
+    t_min_sum = sum(p.t_min for p in live)
+    if not live:
+        alloc = allocation_from_times(budget, costs, 0.0, 0.0, 0.0, 0.0)
+        return SolveReport(alloc, 0.0, 0.0, 0, {})
+    if t_budget <= 0.0 or t_min_sum > t_budget:
+        # Infeasible: even at f_max / P_max the pass deadline cannot be met.
+        times = {p.name: p.t_min for p in live}
+        alloc = _alloc_from_phase_times(budget, costs, phases, times, feasible=False)
+        return SolveReport(alloc, math.inf, math.inf, 0, times)
+
+    t_hi = t_budget  # no phase can use more than the whole budget
+
+    def total_time(lam: float) -> float:
+        return sum(p.t_of_lambda(lam, t_hi) for p in live)
+
+    # Bracket λ: total_time is decreasing in λ.
+    lam_lo, lam_hi = 1e-20, 1.0
+    for _ in range(400):
+        if total_time(lam_hi) <= t_budget:
+            break
+        lam_hi *= 4.0
+    for _ in range(400):
+        if total_time(lam_lo) >= t_budget:
+            break
+        lam_lo /= 4.0
+
+    iters = 0
+    for iters in range(1, 300):
+        lam = math.sqrt(lam_lo * lam_hi)   # geometric mid: λ spans decades
+        if total_time(lam) > t_budget:
+            lam_lo = lam
+        else:
+            lam_hi = lam
+        if lam_hi / lam_lo < 1.0 + tol:
+            break
+    lam = math.sqrt(lam_lo * lam_hi)
+
+    times = {p.name: p.t_of_lambda(lam, t_hi) for p in live}
+    # Use any slack (from t_min-clamped phases) on the cheapest marginal —
+    # distribute residual to interior phases by a final λ refinement pass:
+    slack = t_budget - sum(times.values())
+    if slack > 1e-9 * t_budget:
+        interior = [p for p in live if times[p.name] > p.t_min * (1 + 1e-9)]
+        for p in interior:
+            times[p.name] += slack / max(len(interior), 1)
+
+    # KKT residual: max relative spread of marginals among interior phases.
+    interior_marginals = [p.neg_deriv(times[p.name]) for p in live
+                          if times[p.name] > p.t_min * (1 + 1e-6)
+                          and times[p.name] < t_hi * (1 - 1e-6)]
+    if len(interior_marginals) >= 2:
+        mmin, mmax = min(interior_marginals), max(interior_marginals)
+        kkt = (mmax - mmin) / max(mmax, _EPS)
+    else:
+        kkt = 0.0
+
+    alloc = _alloc_from_phase_times(budget, costs, phases, times, feasible=True)
+    return SolveReport(alloc, lam, kkt, iters, times)
+
+
+def _alloc_from_phase_times(budget, costs, phases, times, feasible):
+    def t_of(idx, name):
+        p = phases[idx]
+        return times.get(name, 0.0) if p is not None else 0.0
+    return allocation_from_times(
+        budget, costs,
+        t_proc_sat=t_of(0, "sat_proc"),
+        t_comm_down=t_of(1, "downlink"),
+        t_proc_gs=t_of(2, "gs_proc"),
+        t_comm_up=t_of(3, "uplink"),
+        feasible=feasible,
+    )
+
+
+# --------------------------------------------------------------------------
+# Straggler mitigation: shed batch fraction until the deadline is met.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SheddingReport:
+    report: SolveReport
+    kept_fraction: float
+    n_items_kept: float
+
+
+def solve_with_shedding(budget: PassBudget, costs: SplitCosts,
+                        min_fraction: float = 0.05,
+                        tol: float = 1e-4) -> SheddingReport:
+    """If (13) is infeasible, find the max batch fraction that fits.
+
+    t_min of every phase scales linearly with n_items, so feasibility is
+    monotone in the kept fraction — bisect on it.  This is the per-pass
+    deadline acting as straggler mitigation (DESIGN.md §2): a slow or
+    energy-poor satellite processes a prefix of its batch rather than
+    stalling the ring.
+    """
+    rep = solve(budget, costs)
+    if rep.allocation.feasible:
+        return SheddingReport(rep, 1.0, budget.n_items)
+
+    lo, hi = min_fraction, 1.0
+    if not _feasible_at(budget, costs, lo):
+        rep = solve(dataclasses.replace(budget, n_items=budget.n_items * lo), costs)
+        return SheddingReport(rep, lo, budget.n_items * lo)
+
+    while hi - lo > tol:
+        mid = 0.5 * (lo + hi)
+        if _feasible_at(budget, costs, mid):
+            lo = mid
+        else:
+            hi = mid
+    frac = lo
+    rep = solve(dataclasses.replace(budget, n_items=budget.n_items * frac), costs)
+    return SheddingReport(rep, frac, budget.n_items * frac)
+
+
+def _feasible_at(budget: PassBudget, costs: SplitCosts, frac: float) -> bool:
+    b = dataclasses.replace(budget, n_items=budget.n_items * frac)
+    phases = [p for p in _build_phases(b, costs) if p is not None]
+    return sum(p.t_min for p in phases) <= b.time_budget_s(costs)
+
+
+# --------------------------------------------------------------------------
+# Microbatch-pipelined SL (beyond-paper): overlap sat-compute / links /
+# gs-compute across M microbatches (parallel split learning).
+# --------------------------------------------------------------------------
+
+def solve_pipelined(budget: PassBudget, costs: SplitCosts,
+                    n_microbatches: int = 8) -> SolveReport:
+    """With M microbatches in flight the four resources (sat CPU, downlink,
+    GS CPU, uplink) run concurrently; wall time ≈ (M+3)/M · max_i t_i
+    (pipeline fill/drain) instead of Σ_i t_i.  Each phase may therefore
+    stretch to T_eff = T_budget·M/(M+3) *independently*, and since every
+    E_i(t) is decreasing the optimum is simply t_i = max(t_i_min, T_eff)
+    — no waterfilling needed.  Energy drops ∝ (Σt→T each): the cubic CPU
+    law turns the extra time straight into f² savings, compounding with
+    the paper's optimizer (EXPERIMENTS.md §Perf beyond-paper row).
+    """
+    phases = [p for p in _build_phases(budget, costs) if p is not None]
+    t_budget = budget.time_budget_s(costs)
+    m = max(1, n_microbatches)
+    t_eff = t_budget * m / (m + 3.0)
+    if not phases:
+        alloc = allocation_from_times(budget, costs, 0, 0, 0, 0)
+        return SolveReport(alloc, 0.0, 0.0, 0, {})
+    if any(p.t_min > t_eff for p in phases) or t_eff <= 0:
+        times = {p.name: p.t_min for p in phases}
+        feas = max(p.t_min for p in phases) <= t_eff > 0
+        alloc = _alloc_from_phase_times(
+            budget, costs, _build_phases(budget, costs), times, feasible=feas)
+        return SolveReport(alloc, math.inf, math.inf, 0, times)
+    times = {p.name: t_eff for p in phases}
+    alloc = _alloc_from_phase_times(
+        budget, costs, _build_phases(budget, costs), times, feasible=True)
+    # NOTE: alloc.t_total sums phases (sequential accounting); the
+    # pipelined wall-clock is (m+3)/m * max(times) + fixed overhead.
+    return SolveReport(alloc, 0.0, 0.0, 1, times)
+
+
+# --------------------------------------------------------------------------
+# Split-point search (beyond-paper: the paper hand-picks ℓ).
+# --------------------------------------------------------------------------
+
+def best_split(budget: PassBudget,
+               candidates: Sequence[SplitCosts]) -> Tuple[SplitCosts, SolveReport]:
+    """Jointly pick the cut point ℓ and the resource allocation."""
+    best: Optional[Tuple[SplitCosts, SolveReport]] = None
+    for costs in candidates:
+        rep = solve(budget, costs)
+        if not rep.allocation.feasible:
+            continue
+        if best is None or rep.allocation.e_total < best[1].allocation.e_total:
+            best = (costs, rep)
+    if best is None:
+        # nothing feasible: fall back to max shedding on the least-bad plan
+        sheds = [(c, solve_with_shedding(budget, c)) for c in candidates]
+        c, s = max(sheds, key=lambda cs: cs[1].kept_fraction)
+        return c, s.report
+    return best

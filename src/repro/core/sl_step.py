@@ -1,0 +1,202 @@
+"""The split-learning train step (paper Fig. 1 steps 1-8, on real models).
+
+One SL step over a batch at the current satellite:
+
+  (1-2) satellite forward on segment A          -> boundary activations z
+  (3)   downlink z (optionally int8-quantized)           [D_tx, eq. 8-9]
+  (4-5) ground forward+loss+backward on segment B
+  (6)   uplink boundary gradient dz (optionally quantized)
+  (7)   satellite backward through segment A (jax.vjp)
+  (8)   both sides apply SGD; at pass end segment A ships over the ISL.
+
+The step is built once per (model, cut) via an adapter; the actual
+boundary tensors and their exact bit-counts are returned so the energy
+accounting (core/energy) charges what the model really transmitted, not
+a spec-sheet estimate.
+
+Boundary quantization (beyond-paper) uses the split_quant kernel's STE
+wrapper so training remains end-to-end differentiable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import SplitCosts
+from repro.core.splitting import SplitPlan
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitAdapter:
+    """Model-agnostic view of a cut model."""
+
+    name: str
+    init: Callable[[Any], Tuple[Any, Any]]          # rng -> (params_a, params_b)
+    forward_a: Callable[[Any, Dict], jnp.ndarray]   # (params_a, batch) -> z
+    loss_b: Callable[[Any, jnp.ndarray, Dict], jnp.ndarray]
+    plan: SplitPlan
+    cut_index: int
+
+    def costs(self, act_bits: int = 32) -> SplitCosts:
+        return self.plan.costs_at(self.cut_index)
+
+
+@dataclasses.dataclass
+class SLStepResult:
+    loss: jnp.ndarray
+    grads_a: Any
+    grads_b: Any
+    dtx_bits_down: int                  # measured boundary payload (one way)
+    dtx_bits_up: int
+
+
+def make_sl_step(adapter: SplitAdapter, *, quantize_boundary: bool = False):
+    """Returns jit'd sl_step(params_a, params_b, batch) -> SLStepResult."""
+
+    q_bits = 8 if quantize_boundary else 32
+
+    def sl_step(params_a, params_b, batch):
+        # satellite forward, with vjp closure kept for step (7)
+        z, vjp_a = jax.vjp(lambda pa: adapter.forward_a(pa, batch), params_a)
+        z_tx = ops.ste_quantize(z) if quantize_boundary else z
+
+        # ground: loss + backward wrt segment B and wrt the boundary
+        def ground(pb, zz):
+            return adapter.loss_b(pb, zz, batch)
+
+        loss, (g_b, g_z) = jax.value_and_grad(ground, argnums=(0, 1))(
+            params_b, z_tx)
+
+        # uplink gradient (quantized the same way on the return path)
+        g_z_tx = ops.ste_quantize(g_z) if quantize_boundary else g_z
+        (g_a,) = vjp_a(g_z_tx.astype(z.dtype))
+
+        payload = z.size * q_bits
+        return loss, g_a, g_b, payload
+
+    jitted = jax.jit(sl_step)
+
+    def run(params_a, params_b, batch) -> SLStepResult:
+        loss, g_a, g_b, payload = jitted(params_a, params_b, batch)
+        return SLStepResult(loss=loss, grads_a=g_a, grads_b=g_b,
+                            dtx_bits_down=int(payload),
+                            dtx_bits_up=int(payload))
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# Adapters for the paper's models and the LM track.
+# --------------------------------------------------------------------------
+
+def autoencoder_adapter(cut: int = 5, img: int = 64, base: int = 16,
+                        latent_ch: int = 3) -> SplitAdapter:
+    """Encoder (satellite) / decoder (ground) — paper §V-A (cut=5)."""
+    from repro.core.splitting import autoencoder_plan
+    from repro.models import vision
+    from repro.models.param import init_params
+
+    names = vision.ae_stage_names()
+
+    def _init(rng):
+        p = init_params(vision.ae_abstract_params(base, latent_ch), rng)
+        pa = {k: p[k] for k in names[:cut]}
+        pb = {k: p[k] for k in names[cut:]}
+        return pa, pb
+
+    def fa(pa, batch):
+        return vision.ae_apply_range(pa, batch["images"], 0, cut)
+
+    def lb(pb, z, batch):
+        recon = vision.ae_apply_range(pb, z, cut, len(names))
+        return jnp.mean(jnp.square(recon.astype(jnp.float32)
+                                   - batch["images"].astype(jnp.float32)))
+
+    return SplitAdapter("autoencoder", _init, fa, lb,
+                        plan=autoencoder_plan(img=img, base=base,
+                                              latent_ch=latent_ch),
+                        cut_index=cut)
+
+
+def resnet18_adapter(cut: int = 5, img: int = 64,
+                     n_classes: int = 10) -> SplitAdapter:
+    """ResNet-18 classification, Table II cuts l1/l2/l3 = 3/5/7."""
+    from repro.core.splitting import resnet18_plan
+    from repro.models import vision
+    from repro.models.param import init_params
+
+    names = vision.RESNET_STAGES
+
+    def _init(rng):
+        p = init_params(vision.resnet18_abstract_params(n_classes), rng)
+        pa = {k: p[k] for k in names[:cut]}
+        pb = {k: p[k] for k in names[cut:]}
+        return pa, pb
+
+    def fa(pa, batch):
+        return vision.resnet18_apply_range(pa, batch["images"], 0, cut)
+
+    def lb(pb, z, batch):
+        logits = vision.resnet18_apply_range(pb, z, cut, len(names))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, batch["labels"][:, None],
+                                 axis=-1)[:, 0]
+        return jnp.mean(lse - ll)
+
+    return SplitAdapter("resnet18", _init, fa, lb,
+                        plan=resnet18_plan(img=img, n_classes=n_classes),
+                        cut_index=cut)
+
+
+def lm_adapter(cfg, cut_units: int, seq_len: int) -> SplitAdapter:
+    """LM split at a pattern-unit boundary: embed+units[:u] on-sat."""
+    from repro.core.splitting import lm_plan
+    from repro.models import lm
+    from repro.models.layers import Ctx
+
+    pat_len = len(cfg.pattern_unit())
+    cut_blocks = cut_units * pat_len
+    ctx = Ctx(cfg=cfg, act_dtype=jnp.float32)
+
+    def _init(rng):
+        p = lm.init(cfg, rng)
+        pa = {"embed": p["embed"],
+              "units": jax.tree.map(lambda t: t[:cut_units], p["units"])}
+        pb = {"units": jax.tree.map(lambda t: t[cut_units:], p["units"]),
+              "final_norm": p["final_norm"]}
+        if "head" in p:
+            pb["head"] = p["head"]
+        else:
+            pb["head_tied"] = p["embed"]     # ground needs the head copy
+        if "shared" in p:
+            pa["shared"] = p["shared"]
+            pb["shared"] = p["shared"]
+        return pa, pb
+
+    def fa(pa, batch):
+        return lm.forward_segment(cfg, pa, None, 0, cut_blocks, ctx=ctx,
+                                  tokens=batch["tokens"])
+
+    def lb(pb, z, batch):
+        pfull = dict(pb)
+        if "head_tied" in pb:
+            pfull = {k: v for k, v in pb.items() if k != "head_tied"}
+            pfull["embed"] = pb["head_tied"]
+            cfg_b = cfg
+        else:
+            cfg_b = cfg
+        logits = lm.forward_segment(
+            cfg_b, pfull, z, cut_blocks, lm.n_blocks(cfg), ctx=ctx,
+            unit_offset=cut_units)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - ll)
+
+    return SplitAdapter(cfg.name, _init, fa, lb,
+                        plan=lm_plan(cfg, seq_len), cut_index=cut_blocks)

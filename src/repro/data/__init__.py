@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline (tokens + satellite imagery)."""
+from repro.data.synthetic import (ImageryShards, TokenShards, prefetch)

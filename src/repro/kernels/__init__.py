@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three layers:
+  <name>.py  - pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target;
+               validated on CPU via interpret=True),
+  ops.py     - public jit'd wrappers; dispatch pallas-on-TPU vs an
+               algorithm-equivalent chunked lax.scan jnp path on CPU so the
+               dry-run HLO reflects the kernel's streaming behavior,
+  ref.py     - pure-jnp naive oracles for allclose sweeps.
+"""

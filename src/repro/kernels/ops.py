@@ -1,0 +1,528 @@
+"""Public kernel ops: jit'd wrappers with platform dispatch.
+
+Two execution paths per op:
+  * Pallas kernel (TPU target; interpret=True on CPU in tests) — the
+    deployment fast path,
+  * an algorithm-equivalent chunked ``lax.scan`` jnp path — runs anywhere,
+    is differentiable (custom_vjp flash backward for attention), and is
+    what the multi-pod dry-run lowers so the compiled HLO's byte/flop
+    traffic matches the kernel's streaming behavior rather than a naive
+    O(S^2)-materialized oracle.
+
+``use_pallas=None`` auto-selects: pallas iff the default backend is TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attn as _decode_pallas
+from repro.kernels import flash_attn as _flash_pallas
+from repro.kernels import mamba_scan as _mamba_pallas
+from repro.kernels import mlstm_scan as _mlstm_pallas
+from repro.kernels import split_quant as _quant_pallas
+
+NEG_INF = -1e30
+
+# Dry-run cost-measurement mode: unroll the internal lax.scans so XLA's
+# cost analysis (which counts a while body once) sees the true work.
+_INNER_UNROLL = False
+
+
+def set_inner_unroll(flag: bool):
+    global _INNER_UNROLL
+    _INNER_UNROLL = bool(flag)
+
+
+def _inner_unroll():
+    return True if _INNER_UNROLL else 1
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_seq(x, axis: int, block: int):
+    s = x.shape[axis]
+    pad = (-s) % block
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ==========================================================================
+# Flash attention (training / prefill): chunked, triangular-skipping,
+# custom_vjp with flash-style recomputing backward.
+# ==========================================================================
+
+def _attn_fwd_blocks(qr, kb, vb, q_start, k_starts, *, scale, causal,
+                     window, seq_kv, compute_dtype=jnp.float32):
+    """Online-softmax over a list of KV blocks for one Q block.
+
+    qr: (B, KV, g, Lq, D); kb/vb: (n, B, KV, Lk, D) stacked blocks.
+    Returns (o, lse) with lse = m + log l. ``compute_dtype`` sets the
+    streamed-operand precision (bf16 halves the HBM traffic of the
+    score/probability tensors; accumulation stays fp32).
+    """
+    B, KV, g, Lq, D = qr.shape
+    Lk = kb.shape[3]
+    qr = qr.astype(compute_dtype)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, k_start = inp
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qr, kblk.astype(compute_dtype),
+                       preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (Lq, Lk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (Lq, Lk), 1)
+        mask = kpos < seq_kv
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(compute_dtype),
+            vblk.astype(compute_dtype),
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, g, Lq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, g, Lq, 1), jnp.float32)
+    a0 = jnp.zeros((B, KV, g, Lq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, k_starts),
+                                  unroll=_inner_unroll())
+    l = jnp.maximum(l, 1e-30)
+    return acc / l, m + jnp.log(l)
+
+
+def _kv_range(qi: int, n_kv: int, *, causal: bool, window: Optional[int],
+              block_q: int, block_k: int) -> Tuple[int, int]:
+    """Static KV block range [lo, hi) in-band for Q block qi."""
+    hi = n_kv
+    if causal:
+        hi = min(n_kv, ((qi + 1) * block_q + block_k - 1) // block_k)
+    lo = 0
+    if window is not None:
+        lo = max(0, (qi * block_q - window + 1) // block_k)
+    return lo, hi
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _chunked_attention(q, k, v, causal, window, block_q, block_k,
+                       compute_dtype):
+    o, _ = _chunked_attention_fwd_impl(q, k, v, causal, window,
+                                       block_q, block_k, compute_dtype)
+    return o
+
+
+def _chunked_attention_fwd_impl(q, k, v, causal, window, block_q, block_k,
+                                compute_dtype=jnp.float32):
+    B, H, Sq, D = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    n_q = -(-Sq // block_q)
+    n_kv = -(-Skv // block_k)
+
+    qp = _pad_seq(q, 2, block_q).reshape(B, KV, g, n_q, block_q, D)
+    kp = _pad_seq(k, 2, block_k).reshape(B, KV, n_kv, block_k, D)
+    vp = _pad_seq(v, 2, block_k).reshape(B, KV, n_kv, block_k, D)
+    k_starts_all = jnp.arange(n_kv, dtype=jnp.int32) * block_k
+
+    os, lses = [], []
+    for qi in range(n_q):                       # static triangular skipping
+        lo, hi = _kv_range(qi, n_kv, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k)
+        kb = jnp.moveaxis(kp[:, :, lo:hi], 2, 0)
+        vb = jnp.moveaxis(vp[:, :, lo:hi], 2, 0)
+        o_qi, lse_qi = _attn_fwd_blocks(
+            qp[:, :, :, qi], kb, vb, qi * block_q, k_starts_all[lo:hi],
+            scale=scale, causal=causal, window=window, seq_kv=Skv,
+            compute_dtype=compute_dtype)
+        os.append(o_qi)
+        lses.append(lse_qi)
+    o = jnp.stack(os, axis=3)                   # (B,KV,g,n_q,bq,D)
+    lse = jnp.stack(lses, axis=3)
+    o = o.reshape(B, H, n_q * block_q, D)[:, :, :Sq].astype(q.dtype)
+    lse = lse.reshape(B, H, n_q * block_q, 1)[:, :, :Sq]
+    return o, lse
+
+
+def _chunked_attention_fwd(q, k, v, causal, window, block_q, block_k,
+                           compute_dtype):
+    o, lse = _chunked_attention_fwd_impl(q, k, v, causal, window,
+                                         block_q, block_k, compute_dtype)
+    return o, (q, k, v, o, lse)
+
+
+def _chunked_attention_bwd(causal, window, block_q, block_k, compute_dtype,
+                           res, do):
+    q, k, v, o, lse = res
+    B, H, Sq, D = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = 1.0 / math.sqrt(D)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    n_q = -(-Sq // bq)
+    n_kv = -(-Skv // bk)
+
+    cd = compute_dtype
+    qp = _pad_seq(q, 2, bq).reshape(B, KV, g, n_q, bq, D).astype(cd)
+    kp = _pad_seq(k, 2, bk).reshape(B, KV, n_kv, bk, D).astype(cd)
+    vp = _pad_seq(v, 2, bk).reshape(B, KV, n_kv, bk, D).astype(cd)
+    dop = _pad_seq(do, 2, bq).reshape(B, KV, g, n_q, bq, D).astype(cd)
+    op = _pad_seq(o, 2, bq).reshape(B, KV, g, n_q, bq, D).astype(cd)
+    lsep = _pad_seq(lse, 2, bq).reshape(B, KV, g, n_q, bq, 1)
+    delta = jnp.sum(dop.astype(jnp.float32) * op.astype(jnp.float32),
+                    axis=-1, keepdims=True)             # (B,KV,g,nq,bq,1)
+
+    dq = jnp.zeros(qp.shape, jnp.float32)
+    dk = jnp.zeros(kp.shape, jnp.float32)
+    dv = jnp.zeros(vp.shape, jnp.float32)
+
+    for qi in range(n_q):
+        lo, hi = _kv_range(qi, n_kv, causal=causal, window=window,
+                           block_q=bq, block_k=bk)
+        q_qi = qp[:, :, :, qi]
+        do_qi = dop[:, :, :, qi]
+        lse_qi = lsep[:, :, :, qi]
+        delta_qi = delta[:, :, :, qi]
+
+        def body(dq_acc, inp):
+            kblk, vblk, k_start = inp
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", q_qi, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = kpos < Skv
+            if causal:
+                mask = mask & (kpos <= qpos)
+            if window is not None:
+                mask = mask & (kpos > qpos - window)
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - lse_qi).astype(cd)             # (B,KV,g,bq,bk)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", do_qi, vblk,
+                            preferred_element_type=jnp.float32)
+            ds = (p.astype(jnp.float32) * (dp - delta_qi) * scale).astype(cd)
+            dq_acc = dq_acc + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kblk,
+                                         preferred_element_type=jnp.float32)
+            dkb = jnp.einsum("bkgqc,bkgqd->bkcd", ds, q_qi,
+                             preferred_element_type=jnp.float32)
+            dvb = jnp.einsum("bkgqc,bkgqd->bkcd", p, do_qi,
+                             preferred_element_type=jnp.float32)
+            return dq_acc, (dkb, dvb)
+
+        kb = jnp.moveaxis(kp[:, :, lo:hi], 2, 0)
+        vb = jnp.moveaxis(vp[:, :, lo:hi], 2, 0)
+        k_starts = (jnp.arange(lo, hi, dtype=jnp.int32)) * bk
+        dq_qi, (dkbs, dvbs) = jax.lax.scan(
+            body, jnp.zeros(q_qi.shape, jnp.float32), (kb, vb, k_starts),
+            unroll=_inner_unroll())
+        dq = dq.at[:, :, :, qi].set(dq_qi)
+        dk = dk.at[:, :, lo:hi].add(jnp.moveaxis(dkbs, 0, 2))
+        dv = dv.at[:, :, lo:hi].add(jnp.moveaxis(dvbs, 0, 2))
+
+    dq = dq.reshape(B, H, n_q * bq, D)[:, :, :Sq].astype(q.dtype)
+    dk = dk.reshape(B, KV, n_kv * bk, D)[:, :, :Skv].astype(k.dtype)
+    dv = dv.reshape(B, KV, n_kv * bk, D)[:, :, :Skv].astype(v.dtype)
+    return dq, dk, dv
+
+
+_chunked_attention.defvjp(_chunked_attention_fwd, _chunked_attention_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    use_pallas: Optional[bool] = None,
+                    compute_dtype=jnp.float32):
+    """q: (B,H,Sq,D); k,v: (B,KV,Skv,D) -> (B,H,Sq,D)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _flash_pallas.flash_attention_fwd(
+            q, k, v, causal=causal, window=window,
+            interpret=not _on_tpu())
+    return _chunked_attention(q, k, v, causal, window, block_q, block_k,
+                              compute_dtype)
+
+
+# ==========================================================================
+# Decode attention (one token vs a KV cache).
+# ==========================================================================
+
+def decode_attention(q, k, v, lengths, *,
+                     use_pallas: Optional[bool] = None):
+    """q: (B,H,1,D); k,v: (B,KV,S,D); lengths: (B,) -> (B,H,1,D).
+
+    The jnp path is a single masked pass over the cache — the op is
+    memory-bound (one read of K and V), which the HLO then reflects.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _decode_pallas.decode_attention(
+            q, k, v, lengths, interpret=not _on_tpu())
+    B, H, _, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KV, g, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qr, k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S)[None, None, None, :]
+    s = jnp.where(kpos < lengths[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, 1, D).astype(q.dtype)
+
+
+# ==========================================================================
+# Mamba-2 SSD chunked scan.
+# ==========================================================================
+
+def mamba_scan(x, dt, a_log, b, c, *, chunk: int = 128,
+               use_pallas: Optional[bool] = None, unroll: int = 1):
+    """Returns (y: (B,S,H,P), h_final: (B,H,P,N)). Differentiable jnp path."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _mamba_pallas.mamba_chunk_scan(
+            x, dt, a_log, b, c, chunk=chunk, interpret=not _on_tpu())
+    return _mamba_chunked_jnp(x, dt, a_log, b, c, chunk=chunk, unroll=unroll)
+
+
+def _mamba_chunked_jnp(x, dt, a_log, b, c, *, chunk: int, unroll: int = 1):
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    L = min(chunk, S)
+    n = -(-S // L)
+    xf = _pad_seq(x.astype(jnp.float32), 1, L).reshape(B, n, L, H, P)
+    dtf = _pad_seq(dt.astype(jnp.float32), 1, L).reshape(B, n, L, H)
+    bf = _pad_seq(b.astype(jnp.float32), 1, L).reshape(B, n, L, N)
+    cf = _pad_seq(c.astype(jnp.float32), 1, L).reshape(B, n, L, N)
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # (H,)
+
+    tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+
+    def body(h, inp):
+        xc, dtc, bc, cc = inp                               # (B,L,H,P),(B,L,H),(B,L,N),(B,L,N)
+        ad = dtc * a                                        # (B,L,H)
+        cum = jnp.cumsum(ad, axis=1)                        # (B,L,H)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,L,L,H)
+        scores = jnp.einsum("btn,bsn->bts", cc, bc)         # (B,L,L)
+        m = jnp.where(tri[None, :, :, None],
+                      decay * scores[..., None] * dtc[:, None], 0.0)
+        y = jnp.einsum("btsh,bshp->bthp", m, xc)
+        y = y + jnp.exp(cum)[..., None] * jnp.einsum("btn,bhpn->bthp",
+                                                     cc, h)
+        total = cum[:, -1:, :]                              # (B,1,H)
+        w = jnp.exp(total - cum) * dtc                      # (B,L,H)
+        h = (jnp.exp(total)[:, 0, :, None, None] * h
+             + jnp.einsum("bshp,bsn,bsh->bhpn", xc, bc, w))
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    hT, ys = jax.lax.scan(body, h0, xs, unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n * L, H, P)[:, :S]
+    return y.astype(x.dtype), hT
+
+
+def mamba_decode_step(h, x_t, dt_t, a_log, b_t, c_t):
+    """Single-token state update. h: (B,H,P,N); returns (y_t, h_new)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(a[None] * dt_t.astype(jnp.float32))     # (B,H)
+    upd = (dt_t[..., None, None] * x_t[..., None].astype(jnp.float32)
+           * b_t[:, None, None, :].astype(jnp.float32))
+    h = h * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, c_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), h
+
+
+# ==========================================================================
+# mLSTM chunkwise scan.
+# ==========================================================================
+
+def mlstm_scan(q, k, v, i_pre, f_pre, *, chunk: int = 256,
+               use_pallas: Optional[bool] = None, unroll: int = 1):
+    """Returns (h: (B,S,H,P), state (C, n, m)). Differentiable jnp path."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        h, (C, n, m) = _mlstm_pallas.mlstm_chunk_scan(
+            q, k, v, i_pre, f_pre, chunk=chunk, interpret=not _on_tpu())
+        return h, (C, n[..., 0], m)
+    return _mlstm_chunked_jnp(q, k, v, i_pre, f_pre, chunk=chunk,
+                              unroll=unroll)
+
+
+def _mlstm_chunked_jnp(q, k, v, i_pre, f_pre, *, chunk: int,
+                       unroll: int = 1):
+    B, S, H, P = q.shape
+    L = min(chunk, S)
+    n_chunks = -(-S // L)
+    scale = 1.0 / math.sqrt(P)
+
+    def blk(t):
+        return _pad_seq(t.astype(jnp.float32), 1, L)
+
+    qf = blk(q).reshape(B, n_chunks, L, H, P) * scale
+    kf = blk(k).reshape(B, n_chunks, L, H, P)
+    vf = blk(v).reshape(B, n_chunks, L, H, P)
+    lif = blk(i_pre).reshape(B, n_chunks, L, H)
+    pad = (-S) % L
+    if pad:   # padded tail: i = -inf (no update), f = 1 (identity decay)
+        tail_mask = jnp.arange(n_chunks * L).reshape(n_chunks, L) < S
+        lif = jnp.where(tail_mask[None, :, :, None], lif, NEG_INF)
+    lff = -jax.nn.softplus(-blk(f_pre).reshape(B, n_chunks, L, H))
+    if pad:
+        lff = jnp.where(tail_mask[None, :, :, None], lff, 0.0)
+
+    tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+
+    def body(carry, inp):
+        C, n, m = carry                                      # (B,H,P,P),(B,H,P),(B,H)
+        qc, kc, vc, li, lf = inp
+        bcum = jnp.cumsum(lf, axis=1)                        # (B,L,H)
+        dmat = jnp.where(tri[None, :, :, None],
+                         bcum[:, :, None, :] - bcum[:, None, :, :]
+                         + li[:, None, :, :], NEG_INF)       # (B,L,L,H)
+        m_intra = jnp.max(dmat, axis=2)                      # (B,L,H)
+        m_inter = bcum + m[:, None, :]
+        m_row = jnp.maximum(m_intra, m_inter)                # (B,L,H)
+        s = jnp.einsum("bthp,bshp->btsh", qc, kc)
+        w = jnp.exp(dmat - m_row[:, :, None, :])
+        sw = s * w
+        inter = jnp.exp(m_inter - m_row)                     # (B,L,H)
+        num = (jnp.einsum("btsh,bshp->bthp", sw, vc)
+               + inter[..., None] * jnp.einsum("bthp,bhpv->bthv", qc, C))
+        den = (jnp.sum(sw, axis=2)
+               + inter * jnp.einsum("bthp,bhp->bth", qc, n))
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_row))
+        h = num / den[..., None]
+
+        btot = bcum[:, -1, :]                                # (B,H)
+        m_new = m_row[:, -1, :]                              # sequential m
+        wk = jnp.exp(btot[:, None, :] - bcum + li)           # (B,L,H)
+        wk = wk * jnp.exp(-m_new)[:, None, :]
+        decay = jnp.exp(btot + m - m_new)                    # (B,H)
+        C = (decay[..., None, None] * C
+             + jnp.einsum("bshp,bshv->bhpv", kc * wk[..., None], vc))
+        n = decay[..., None] * n + jnp.sum(kc * wk[..., None], axis=1)
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B, H, P), jnp.float32)
+    m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, lif, lff))
+    (CT, nT, mT), hs = jax.lax.scan(body, (C0, n0, m0), xs,
+                                    unroll=unroll)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, n_chunks * L, H, P)[:, :S]
+    return h.astype(q.dtype), (CT, nT, mT)
+
+
+def mlstm_decode_step(state, q_t, k_t, v_t, i_t, f_t):
+    """Single-token mLSTM update. state = (C, n, m); q_t..: (B,H,P)."""
+    C, n, m = state
+    P = q_t.shape[-1]
+    scale = 1.0 / math.sqrt(P)
+    qf = q_t.astype(jnp.float32) * scale
+    kf, vf = k_t.astype(jnp.float32), v_t.astype(jnp.float32)
+    li = i_t.astype(jnp.float32)
+    lf = -jax.nn.softplus(-f_t.astype(jnp.float32))
+    m_new = jnp.maximum(lf + m, li)
+    fs = jnp.exp(lf + m - m_new)
+    iz = jnp.exp(li - m_new)
+    C = fs[..., None, None] * C + iz[..., None, None] * (
+        kf[..., None] * vf[..., None, :])
+    n = fs[..., None] * n + iz[..., None] * kf
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q_t.dtype)
+    return h, (C, n, m_new)
+
+
+# ==========================================================================
+# sLSTM sequential scan (true recurrence; lives here so the dry-run can
+# micro-measure its per-step body cost with unroll extrapolation).
+# ==========================================================================
+
+def slstm_scan(xproj, wh, c0, n0, h0, m0, *, unroll: int = 1):
+    """xproj: (B,S,4d) precomputed input projections (+bias); wh: (d,4d).
+
+    Stabilized exponential-gating sLSTM. Returns (h: (B,S,d), carry).
+    """
+    def step(carry, xp):
+        c, n, h, m = carry
+        g = xp + h @ wh
+        zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(zt)
+        o = jax.nn.sigmoid(ot)
+        lf = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        c = f_s * c + i_s * z
+        n = jnp.maximum(f_s * n + i_s, jnp.exp(-m_new))
+        h = o * (c / n)
+        return (c, n, h, m_new), h
+
+    carry, hs = jax.lax.scan(step, (c0, n0, h0, m0),
+                             jnp.moveaxis(xproj, 1, 0), unroll=unroll)
+    return jnp.moveaxis(hs, 0, 1), carry
+
+
+# ==========================================================================
+# SL boundary quantization (straight-through for training).
+# ==========================================================================
+
+def quantize_boundary(x, *, use_pallas: Optional[bool] = None):
+    """Per-row int8 quantization of a 2D-flattenable tensor."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        q, s = _quant_pallas.quantize_rows(x2, interpret=not _on_tpu())
+    else:
+        from repro.kernels import ref
+        q, s = ref.quantize_rows(x2)
+    return q.reshape(shape), s.reshape(shape[:-1] + (1,))
+
+
+def dequantize_boundary(q, s, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+@jax.custom_vjp
+def ste_quantize(x):
+    """Quantize-dequantize with straight-through gradients (training)."""
+    q, s = quantize_boundary(x, use_pallas=False)
+    return dequantize_boundary(q, s, x.dtype)
+
+
+def _ste_fwd(x):
+    return ste_quantize(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)

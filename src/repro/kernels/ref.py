@@ -1,0 +1,152 @@
+"""Pure-jnp naive oracles for every kernel (full materialization /
+sequential scans, fp32). These define correctness; kernels and the
+chunked ops paths are asserted allclose against these in tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Attention (flash_attn / decode_attn oracle).
+# --------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None,
+              kv_len: Optional[jnp.ndarray] = None,
+              q_offset: int | jnp.ndarray = 0):
+    """Naive softmax attention with GQA.
+
+    q: (B, H, Sq, D); k, v: (B, KV, Skv, D) with H % KV == 0.
+    ``q_offset``: absolute position of q[0] (for decode: cache length).
+    ``kv_len``: (B,) valid cache lengths (decode masking); None = all valid.
+    """
+    B, H, Sq, D = q.shape
+    KV = k.shape[1]
+    Skv = k.shape[2]
+    g = H // KV
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) / math.sqrt(D)
+
+    qpos = jnp.arange(Sq)[:, None] + q_offset          # (Sq, 1) or (B,Sq,1)
+    kpos = jnp.arange(Skv)[None, :]
+    if jnp.ndim(q_offset) > 0:                          # per-batch offsets
+        qpos = jnp.arange(Sq)[None, :, None] + jnp.reshape(q_offset, (-1, 1, 1))
+        kpos = jnp.arange(Skv)[None, None, :]
+    mask = jnp.ones((Sq, Skv), bool) if jnp.ndim(qpos) == 2 else \
+        jnp.ones((B, Sq, Skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    if kv_len is not None:
+        mask = mask & (kpos < jnp.reshape(kv_len, (-1, 1, 1)))
+    if mask.ndim == 2:
+        mask = mask[None]
+    s = jnp.where(mask[:, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)                 # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 SSD (mamba_scan oracle): sequential recurrence, fp32.
+# --------------------------------------------------------------------------
+
+def mamba_ssd(x, dt, a_log, b, c, h0=None):
+    """h_t = exp(a*dt_t) h_{t-1} + dt_t * (b_t ⊗ x_t);  y_t = h_t c_t.
+
+    x:  (B, S, H, P)   per-head channels
+    dt: (B, S, H)      positive step sizes
+    a_log: (H,)        A = -exp(a_log) (negative decay rate)
+    b, c: (B, S, N)    shared across heads (n_groups=1)
+    h0: (B, H, P, N) initial state. Returns (y, h_final).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))             # (H,)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                            # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(a[None] * dtt)                   # (B,H)
+        upd = (dtt[..., None, None] * xt[..., None]
+               * bt[:, None, None, :])                   # (B,H,P,N)
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hT
+
+
+# --------------------------------------------------------------------------
+# xLSTM mLSTM (mlstm_scan oracle): sequential stabilized recurrence.
+# --------------------------------------------------------------------------
+
+def mlstm(q, k, v, i_pre, f_pre, state=None):
+    """Stabilized mLSTM recurrence (xLSTM eq. 19-27).
+
+    q,k,v: (B, S, H, P); i_pre,f_pre: (B, S, H) pre-activations.
+    state: (C, n, m) with C (B,H,P,P), n (B,H,P), m (B,H). Returns (h, state).
+    """
+    B, S, H, P = q.shape
+    scale = 1.0 / math.sqrt(P)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    log_i = i_pre.astype(jnp.float32)
+    log_f = -jax.nn.softplus(-f_pre.astype(jnp.float32))   # log sigmoid
+
+    if state is None:
+        C0 = jnp.zeros((B, H, P, P), jnp.float32)           # keys x values
+        n0 = jnp.zeros((B, H, P), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, li, lf = inp                             # (B,H,P)x3,(B,H)x2
+        m_new = jnp.maximum(lf + m, li)
+        fs = jnp.exp(lf + m - m_new)[..., None]
+        iz = jnp.exp(li - m_new)[..., None]
+        C = fs[..., None] * C + iz[..., None] * (kt[..., None] * vt[..., None, :])
+        n = fs * n + iz * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, log_i, log_f))
+    (CT, nT, mT), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (CT, nT, mT)
+
+
+# --------------------------------------------------------------------------
+# SL boundary int8 quantization (split_quant oracle).
+# --------------------------------------------------------------------------
+
+def quantize_rows(x):
+    """Per-row symmetric int8: returns (q int8, scale fp32 per row)."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

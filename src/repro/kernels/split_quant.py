@@ -1,0 +1,48 @@
+"""SL-boundary int8 quantization — Pallas TPU kernel (beyond-paper).
+
+The split-learning boundary payload (activations down, gradients up) is
+the paper's D_tx; quantizing it int8 cuts comm energy ~4x (eq. 9). The
+kernel fuses the per-row abs-max reduction with the scale/round/clip in
+one VMEM pass so the boundary tensor is read from HBM exactly once —
+on the satellite's power budget, memory traffic is energy.
+
+Grid: (n_row_blocks,), each block (block_rows x d) resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_rows(x, *, block_rows: int = 256, interpret: bool = True):
+    """x: (rows, d) -> (q int8 (rows, d), scale fp32 (rows, 1))."""
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    n = pl.cdiv(rows, block_rows)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d), jnp.int8),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,506 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on
+first init, and the production meshes need 512 placeholder host devices.
+Only this entry point does that — tests and benches see one device.
+
+Per cell this produces:
+  * proof of compile (sharding-coherent pjit program on the target mesh),
+  * memory_analysis() (fits-per-device evidence),
+  * cost_analysis() FLOPs/bytes (roofline compute & memory terms),
+  * collective op census from the post-SPMD HLO (collective term).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out results/dryrun.json
+  python -m repro.launch.dryrun --all --preset baseline
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import SHAPES, applicable, input_specs, skip_reason
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import lm
+from repro.models.param import ShardingRules, partition_specs, shape_structs
+from repro.train.step import (TrainConfig, make_decode_step,
+                              make_prefill_step, make_train_step)
+from repro.utils import hlo as hlo_util
+
+
+# --------------------------------------------------------------------------
+# Sharding / step presets (the §Perf hillclimb knobs).
+# --------------------------------------------------------------------------
+
+PRESETS: Dict[str, Dict[str, Any]] = {
+    # paper-faithful baseline: batch over (pod, data); megatron TP over
+    # model; ZeRO over data; full remat.
+    "baseline": {},
+    # sequence-sharded activations for the long cells
+    "seqshard": {"rules": {"seq": "model"}},
+    # no remat (memory for compute)
+    "noremat": {"tcfg": {"remat": "none"}},
+    "dots": {"tcfg": {"remat": "dots"}},
+    # expert parallelism for MoE: experts over model axis
+    "ep": {"rules": {"experts": "model", "mlp": None}},
+    # bigger attention tiles
+    "bigblocks": {"tcfg": {"block_q": 1024, "block_k": 1024}},
+    # fp32 activations (ablation)
+    "fp32act": {"tcfg": {"act_dtype": jnp.float32}},
+    # bf16 streamed attention operands (halves score-tensor HBM traffic)
+    "bf16attn": {"tcfg": {"attn_compute_dtype": jnp.bfloat16}},
+    # pad attention heads to the model-axis multiple (Megatron practice;
+    # fixes smollm 15-head / qwen 28-head replication). zero-init pad head
+    # at deployment keeps the function identical.
+    "padheads": {"cfg": {"pad_heads": True}},
+    # smaller mlstm chunk: intra-chunk work scales with L, state I/O is
+    # VMEM-resident in the fused kernel
+    "chunk128": {"tcfg": {"mlstm_chunk": 128}},
+    "chunk64": {"tcfg": {"mlstm_chunk": 64}},
+    "opt_xlstm": {"tcfg": {"mlstm_chunk": 64, "remat": "dots"}},
+    # small models don't want TP-16: batch over BOTH axes (256-way DP),
+    # weights replicated, optimizer state ZeRO'd over all chips
+    "puredp": {"rules": {"batch": ("pod", "data", "model"), "heads": None,
+                         "kv_heads": None, "mlp": None, "vocab": None,
+                         "inner": None, "zero": ("data", "model")}},
+    # combination winners (see EXPERIMENTS.md §Perf)
+    "opt": {"rules": {"batch": ("pod", "data", "model"), "heads": None,
+                      "kv_heads": None, "mlp": None, "vocab": None,
+                      "inner": None, "zero": ("data", "model")},
+            "tcfg": {"attn_compute_dtype": jnp.bfloat16}},
+    "opt_moe": {"rules": {"experts": "model", "mlp": None},
+                "tcfg": {"attn_compute_dtype": jnp.bfloat16}},
+    # batch-local MoE dispatch: per-row buffers, zero dispatch collectives
+    "moelocal": {"tcfg": {"moe_dispatch": "batch_local"}},
+    "opt_moe2": {"tcfg": {"moe_dispatch": "batch_local",
+                          "attn_compute_dtype": jnp.bfloat16}},
+}
+
+
+def build_rules(overrides: Dict[str, Any]) -> ShardingRules:
+    return dataclasses.replace(ShardingRules(), **overrides)
+
+
+def build_tcfg(overrides: Dict[str, Any]) -> TrainConfig:
+    return dataclasses.replace(TrainConfig(), **overrides)
+
+
+# --------------------------------------------------------------------------
+# Cell lowering.
+# --------------------------------------------------------------------------
+
+def _with_sharding(structs: Dict, mesh, rules: ShardingRules) -> Dict:
+    from jax.sharding import NamedSharding
+    out = {}
+    for k, s in structs.items():
+        spec = rules.resolve(("batch",) + (None,) * (len(s.shape) - 1),
+                             mesh, s.shape)
+        out[k] = jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                      sharding=NamedSharding(mesh, spec))
+    return out
+
+
+def _mem_report(compiled) -> Dict[str, float]:
+    out = {}
+    try:
+        m = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(m, attr, None)
+            if v is not None:
+                out[attr] = float(v)
+        out["total_per_device_bytes"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0))
+    except Exception as e:                                  # CPU backend gaps
+        out["error"] = str(e)
+    return out
+
+
+def _cost_report(compiled) -> Dict[str, float]:
+    out = {}
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        for k in ("flops", "bytes accessed", "transcendentals",
+                  "optimal_seconds"):
+            if k in c:
+                out[k.replace(" ", "_")] = float(c[k])
+    except Exception as e:
+        out["error"] = str(e)
+    return out
+
+
+def _model_flops(cfg, shape) -> Dict[str, float]:
+    """6·N·D (train) / 2·N·D (inference) with N = active non-embedding
+    params + head; plus the analytic full-graph estimate (incl. attention)."""
+    from repro.core.splitting import lm_plan
+    n_active = cfg.active_param_count() - cfg.vocab * cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:
+        tokens = shape.global_batch * 1
+        mult = 2.0
+    plan = lm_plan(cfg, shape.seq_len if shape.kind != "decode" else 1)
+    analytic = (sum(l.fwd_flops * (l.active_param_count / max(l.param_count, 1))
+                    for l in plan.layers)
+                + plan.gs_fixed_fwd_flops)
+    analytic *= shape.global_batch * (3.0 if shape.kind == "train" else 1.0)
+    return {"model_flops_6nd": mult * n_active * tokens,
+            "analytic_flops": analytic}
+
+
+def _scan_topup(cfg, shape, mesh, rules, tcfg) -> Dict[str, Any]:
+    """Per-trip body cost of recurrent-scan ops (mamba2 / mlstm / slstm).
+
+    These stay `lax.scan` (while loops) in the cost variants — unrolling
+    them explodes compile time — so the main measurement counts each
+    body ONCE per block. Here each op is micro-compiled alone at the
+    cell's global shapes/shardings with unroll k=1 and k=2; the diff is
+    exactly one trip's body (fwd [+ remat + bwd for train]), and the
+    top-up adds (n_trips - 1) x n_blocks_of_kind bodies.
+    """
+    from collections import Counter
+    from jax.sharding import NamedSharding
+    from repro.kernels import ops as kops
+    from repro.models.layers import mamba_dims
+
+    kinds = Counter(k for k in cfg.block_kinds()
+                    if k in ("mamba2", "mlstm", "slstm"))
+    out = {"flops": 0.0, "bytes": 0.0, "coll": 0.0, "detail": {}}
+    if not kinds or shape.kind == "decode":
+        return out
+    B, S = shape.global_batch, shape.seq_len
+    train = shape.kind == "train"
+    act = tcfg.act_dtype
+
+    def struct(shp, dtype):
+        spec = rules.resolve(("batch",) + (None,) * (len(shp) - 1),
+                             mesh, shp)
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    def rep(shp, dtype=jnp.float32):
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=NamedSharding(
+                mesh, rules.resolve((None,) * len(shp), mesh, shp)))
+
+    def measure(opfn, args, n_diff):
+        def run(k):
+            def scalar(*a):
+                return jnp.sum(opfn(*a, unroll=k).astype(jnp.float32))
+            if train:
+                prog = jax.grad(jax.checkpoint(scalar),
+                                argnums=tuple(range(n_diff)))
+            else:
+                prog = scalar
+            comp = jax.jit(prog).lower(*args).compile()
+            c = comp.cost_analysis()
+            if isinstance(c, (list, tuple)):
+                c = c[0]
+            return (float(c.get("flops", 0.0)),
+                    float(c.get("bytes accessed", 0.0)),
+                    hlo_util.collective_bytes(comp.as_text()))
+        f1, b1, cb1 = run(1)
+        f2, b2, cb2 = run(2)
+        # clamp: XLA may fuse across the two unrolled bodies making a
+        # diff slightly negative; a body cost is necessarily >= 0
+        return max(f2 - f1, 0.0), max(b2 - b1, 0.0), max(cb2 - cb1, 0.0)
+
+    for kind, n_blocks in kinds.items():
+        if kind == "mamba2":
+            di, H, P, N = mamba_dims(cfg)
+            chunk = tcfg.mamba_chunk
+            n_trips = -(-S // chunk)
+            opfn = lambda x, dt, b, c, al, unroll=1, _ck=chunk: \
+                kops.mamba_scan(x, dt, al, b, c, chunk=_ck,
+                                use_pallas=False, unroll=unroll)[0]
+            args = (struct((B, S, H, P), act), struct((B, S, H), jnp.float32),
+                    struct((B, S, N), act), struct((B, S, N), act),
+                    rep((H,)))
+            n_diff = 4
+        elif kind == "mlstm":
+            H = cfg.n_heads
+            P = cfg.d_inner // H
+            chunk = tcfg.mlstm_chunk
+            n_trips = -(-S // chunk)
+            opfn = lambda q, k, v, i, f, unroll=1, _ck=chunk: \
+                kops.mlstm_scan(q, k, v, i, f, chunk=_ck,
+                                use_pallas=False, unroll=unroll)[0]
+            args = tuple(struct((B, S, H, P), act) for _ in range(3)) + \
+                tuple(struct((B, S, H), jnp.float32) for _ in range(2))
+            n_diff = 5
+        else:  # slstm
+            d = cfg.d_model
+            n_trips = S
+            opfn = lambda xp, wh, unroll=1: kops.slstm_scan(
+                xp, wh, jnp.zeros((B, d)), jnp.zeros((B, d)),
+                jnp.zeros((B, d)), jnp.full((B, d), -1e30),
+                unroll=unroll)[0]
+            args = (struct((B, S, 4 * d), jnp.float32),
+                    rep((d, 4 * d)))
+            n_diff = 2
+        df, db, dc = measure(opfn, args, n_diff)
+        mult = (n_trips - 1) * n_blocks
+        out["flops"] += mult * df
+        out["bytes"] += mult * db
+        out["coll"] += mult * dc
+        out["detail"][kind] = {"body_flops": df, "body_bytes": db,
+                               "body_coll": dc, "n_trips": n_trips,
+                               "n_blocks": n_blocks}
+    return out
+
+
+def _compile_variant(cfg, shape, mesh, rules, tcfg, batch, unroll: int):
+    """Lower + compile one variant; returns (compiled, t_lower, t_compile)."""
+    t0 = time.time()
+    if shape.kind == "train":
+        tc = dataclasses.replace(tcfg, scan_unroll=unroll)
+        step, _, _, init_state = make_train_step(cfg, mesh, rules, tc)
+        state_struct = jax.eval_shape(init_state, jax.random.key(0))
+        lowered = step.lower(state_struct, batch)
+    elif shape.kind == "prefill":
+        step, _ = make_prefill_step(
+            cfg, mesh, rules, act_dtype=tcfg.act_dtype,
+            block_q=tcfg.block_q, block_k=tcfg.block_k, unroll=unroll)
+        pstruct = shape_structs(lm.abstract_params(cfg))
+        lowered = step.lower(pstruct, batch)
+    else:  # decode
+        step, _, _, cache_struct = make_decode_step(
+            cfg, mesh, rules, batch=shape.global_batch,
+            s_max=shape.seq_len, act_dtype=tcfg.act_dtype, unroll=unroll)
+        pstruct = shape_structs(lm.abstract_params(cfg))
+        lowered = step.lower(pstruct, cache_struct,
+                             batch["tokens"], batch["positions"])
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0 - t_lower
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               preset: str = "baseline", verbose: bool = True,
+               cost_pass: bool = True) -> Dict[str, Any]:
+    """One dry-run cell.
+
+    Production compile (scanned units, streaming inner scans) proves the
+    sharding and yields memory_analysis. XLA's cost analysis counts a
+    while body ONCE regardless of trip count, so flops/bytes/collectives
+    are measured on two cost variants with the inner scans unrolled and
+    the unit scan unrolled k=1 and k=2: per-unit cost = m2 - m1 exactly,
+    total = m1 + (n_units - 1) * (m2 - m1).
+    """
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    over_cfg = PRESETS[preset].get("cfg", {})
+    if over_cfg.get("pad_heads"):
+        axis = 16
+        pad = (-cfg.n_heads) % axis
+        if pad and (cfg.n_heads + pad) % cfg.n_kv_heads == 0:
+            cfg = dataclasses.replace(cfg, n_heads=cfg.n_heads + pad)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "preset": preset,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+    }
+    if not applicable(cfg, shape):
+        result["status"] = "skipped"
+        result["reason"] = skip_reason(cfg, shape)
+        return result
+
+    over = PRESETS[preset]
+    rules = build_rules(over.get("rules", {}))
+    tcfg = build_tcfg(over.get("tcfg", {}))
+    if shape.seq_len >= 32768 and "tcfg" not in over:
+        tcfg = dataclasses.replace(tcfg, block_q=2048, block_k=2048)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    n_units = cfg.n_units
+
+    with mesh:
+        specs = input_specs(cfg, shape, act_dtype=tcfg.act_dtype)
+        batch = _with_sharding(specs, mesh, rules)
+
+        # 1) production artifact: compile proof + memory analysis
+        compiled, t_lower, t_compile = _compile_variant(
+            cfg, shape, mesh, rules, tcfg, batch, unroll=1)
+        mem = _mem_report(compiled)
+
+        # 2) cost variants (inner scans unrolled; unit scan k=1, k=2)
+        from repro.kernels import ops as kops
+        def _measure(c):
+            cost = _cost_report(c)
+            text = c.as_text()
+            coll = hlo_util.collective_stats(text)
+            return (cost.get("flops", 0.0), cost.get("bytes_accessed", 0.0),
+                    sum(v["bytes"] for v in coll.values()), coll)
+
+        if cost_pass:
+            kops.set_inner_unroll(True)
+            try:
+                c1, _, tc1 = _compile_variant(cfg, shape, mesh, rules, tcfg,
+                                              batch, unroll=1)
+                f1, b1, cb1, coll1 = _measure(c1)
+                del c1
+                c2, _, tc2 = _compile_variant(cfg, shape, mesh, rules, tcfg,
+                                              batch, unroll=2)
+                f2, b2, cb2, coll2 = _measure(c2)
+                del c2
+            finally:
+                kops.set_inner_unroll(False)
+            # per-unit deltas; XLA occasionally fuses ACROSS the two
+            # unrolled bodies making a delta slightly negative - clamp to
+            # the k1 floor rather than extrapolating an artifact
+            flops_dev = max(f1 + (n_units - 1) * (f2 - f1), f1)
+            bytes_dev = max(b1 + (n_units - 1) * (b2 - b1), b1)
+            coll_bytes = max(cb1 + (n_units - 1) * (cb2 - cb1), cb1)
+            topup = _scan_topup(cfg, shape, mesh, rules, tcfg)
+            flops_dev += topup["flops"]
+            bytes_dev += topup["bytes"]
+            coll_bytes += topup["coll"]
+            coll = {op: {"count": coll1[op]["count"]
+                         + (n_units - 1) * (coll2[op]["count"]
+                                            - coll1[op]["count"]),
+                         "bytes": coll1[op]["bytes"]
+                         + (n_units - 1) * (coll2[op]["bytes"]
+                                            - coll1[op]["bytes"])}
+                    for op in coll1}
+            cost = {"flops": flops_dev, "bytes_accessed": bytes_dev,
+                    "k1": {"flops": f1, "bytes": b1, "coll": cb1},
+                    "k2": {"flops": f2, "bytes": b2, "coll": cb2},
+                    "scan_topup": topup,
+                    "cost_compile_s": round(tc1 + tc2, 1)}
+        else:
+            cost = _cost_report(compiled)
+            coll = hlo_util.collective_stats(compiled.as_text())
+            coll_bytes = sum(v["bytes"] for v in coll.values())
+            flops_dev = cost.get("flops", 0.0)
+            bytes_dev = cost.get("bytes_accessed", 0.0)
+
+    mf = _model_flops(cfg, shape)
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful_s = mf["model_flops_6nd"] / (n_chips * PEAK_FLOPS_BF16)
+    bound_s = max(terms.values())
+    result.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "n_units": n_units,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost": cost,
+        "collectives": coll,
+        "collective_bytes_per_device": coll_bytes,
+        **mf,
+        "roofline": {
+            **{k: v for k, v in terms.items()},
+            "dominant": dominant,
+            "useful_s": useful_s,
+            "bound_s": bound_s,
+            "roofline_fraction": useful_s / bound_s if bound_s > 0 else 0.0,
+            "flops_ratio_useful":
+                mf["model_flops_6nd"] / (flops_dev * n_chips)
+                if flops_dev else 0.0,
+        },
+    })
+    if verbose:
+        r = result["roofline"]
+        print(f"[{result['mesh']}:{preset}] {arch} x {shape_name}: "
+              f"compile {t_compile:.1f}s | flops/dev {flops_dev:.3e} "
+              f"bytes/dev {bytes_dev:.3e} coll/dev {coll_bytes:.3e} | "
+              f"T(comp/mem/coll) {compute_s:.4f}/{memory_s:.4f}/"
+              f"{collective_s:.4f}s -> {dominant} | "
+              f"roofline {r['roofline_fraction']:.3f}")
+        print("  memory_analysis:", {k: f"{v:.3e}" for k, v in mem.items()
+                                     if isinstance(v, float)})
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--preset", default="baseline", choices=sorted(PRESETS))
+    ap.add_argument("--no-cost-pass", action="store_true",
+                    help="compile proof + memory only (multi-pod sweep)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in configs.ASSIGNED:
+            for s in SHAPES:
+                cells.append((a, s))
+    elif args.arch and not args.shape:
+        cells = [(args.arch, s) for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch [--shape] or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    failures = 0
+    for mp in meshes:
+        for a, s in cells:
+            try:
+                results.append(lower_cell(a, s, multi_pod=mp,
+                                          preset=args.preset,
+                                          cost_pass=not args.no_cost_pass))
+            except Exception:
+                failures += 1
+                traceback.print_exc()
+                results.append({"arch": a, "shape": s,
+                                "mesh": "pod2x16x16" if mp else "pod16x16",
+                                "preset": args.preset, "status": "error",
+                                "error": traceback.format_exc()[-2000:]})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        # replace same-key entries
+        key = lambda r: (r["arch"], r["shape"], r["mesh"], r["preset"])
+        merged = {key(r): r for r in existing}
+        for r in results:
+            merged[key(r)] = r
+        with open(args.out, "w") as f:
+            json.dump(list(merged.values()), f, indent=1)
+        print(f"wrote {len(results)} cells -> {args.out}")
+    ok = sum(r.get("status") == "ok" for r in results)
+    sk = sum(r.get("status") == "skipped" for r in results)
+    print(f"dry-run: {ok} ok, {sk} skipped, {failures} failed, "
+          f"{len(results)} total")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

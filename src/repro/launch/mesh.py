@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes (data, model) — a TPU v5e pod.
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model); the pod
+axis is pure data parallelism over the inter-pod (DCN/optical) links —
+in the paper's terms, independent orbital planes training replicas whose
+gradients all-reduce over inter-plane ISLs.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host actually has (tests / examples): (n//m, m)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e roofline constants (per chip) — §Roofline hardware targets.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (~45 GB/s usable)

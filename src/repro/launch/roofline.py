@@ -1,0 +1,124 @@
+"""Roofline report: turn results/dryrun.json into the EXPERIMENTS.md
+§Roofline table + per-cell bottleneck advice.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.roofline results/dryrun.json --md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+ADVICE = {
+    "memory_s": ("fuse the attention/scan inner loops (the Pallas kernels "
+                 "keep score matrices in VMEM; the jnp dry-run path streams "
+                 "them through HBM) and drop fp32 intermediates to bf16"),
+    "compute_s": ("reduce recompute (remat policy) and replicated compute "
+                  "(head-count vs model-axis divisibility); shard attention "
+                  "over head_dim when heads don't divide the axis"),
+    "collective_s": ("reorder shardings to turn all-gathers into "
+                     "reduce-scatters, overlap DP grad reduction with the "
+                     "backward scan, or compress gradients (topk/int8)"),
+}
+
+
+def load(path: str, mesh: str = "pod16x16", preset: str = None) -> List[Dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    out = [r for r in rows if r.get("mesh") == mesh]
+    if preset is not None:
+        out = [r for r in out if r.get("preset") == preset]
+    return out
+
+
+def _fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e4:
+        return f"{x:.{digits}e}"
+    return f"{x:.{digits}g}"
+
+
+def table(rows: List[Dict], md: bool = False) -> str:
+    hdr = ["arch", "shape", "preset", "T_comp[s]", "T_mem[s]", "T_coll[s]",
+           "dominant", "6ND[s]", "MODEL/HLO", "roofline"]
+    lines = []
+    if md:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(",".join(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r.get("preset", ""))):
+        if r.get("status") == "skipped":
+            row = [r["arch"], r["shape"], r.get("preset", ""), "-", "-", "-",
+                   "skipped", "-", "-", "-"]
+        elif r.get("status") != "ok":
+            row = [r["arch"], r["shape"], r.get("preset", ""), "-", "-", "-",
+                   "ERROR", "-", "-", "-"]
+        else:
+            rf = r["roofline"]
+            row = [r["arch"], r["shape"], r.get("preset", ""),
+                   _fmt(rf["compute_s"]), _fmt(rf["memory_s"]),
+                   _fmt(rf["collective_s"]),
+                   rf["dominant"].replace("_s", ""),
+                   _fmt(rf["useful_s"]),
+                   _fmt(rf["flops_ratio_useful"], 2),
+                   _fmt(rf["roofline_fraction"], 3)]
+        if md:
+            lines.append("| " + " | ".join(map(str, row)) + " |")
+        else:
+            lines.append(",".join(map(str, row)))
+    return "\n".join(lines)
+
+
+def advice(rows: List[Dict]) -> str:
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        lines.append(f"- {r['arch']} x {r['shape']}: {rf['dominant']} "
+                     f"dominates ({_fmt(rf[rf['dominant']])} s vs useful "
+                     f"{_fmt(rf['useful_s'])} s) -> "
+                     f"{ADVICE[rf['dominant']]}.")
+    return "\n".join(lines)
+
+
+def interesting_cells(rows: List[Dict]) -> Dict[str, Dict]:
+    """The three hillclimb picks: worst roofline fraction, most
+    collective-bound, most representative of the paper's technique."""
+    ok = [r for r in rows if r.get("status") == "ok"]
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+    # "most representative": the runnable SL driver arch at train shape
+    rep = next((r for r in ok if r["arch"] == "smollm_360m"
+                and r["shape"] == "train_4k"), ok[0])
+    return {"worst_roofline": worst, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--preset", default=None)
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--advice", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.path, args.mesh, args.preset)
+    print(table(rows, md=args.md))
+    if args.advice:
+        print()
+        print(advice(rows))
+        picks = interesting_cells(rows)
+        print("\nhillclimb picks:")
+        for k, r in picks.items():
+            print(f"  {k}: {r['arch']} x {r['shape']} "
+                  f"(fraction {r['roofline']['roofline_fraction']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: pure-JAX init/apply models with logical-axis sharding."""

@@ -1,0 +1,518 @@
+"""Model layers: RMSNorm, RoPE/M-RoPE, GQA attention, SwiGLU/GELU MLP,
+top-k MoE with capacity dispatch, Mamba-2, mLSTM, sLSTM.
+
+Every layer is a (spec_*, apply_*) pair: ``spec_*`` returns the
+ParamSpec tree (shapes + logical sharding axes), ``apply_*`` is the pure
+function. Compute runs in the activation dtype (bf16 by default) with
+fp32 params cast at use; attention/scan inner math is fp32 (see
+kernels/ops.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.param import ParamSpec, ShardingRules, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call context threaded through blocks."""
+
+    cfg: Any
+    mesh: Any = None
+    rules: ShardingRules = ShardingRules()
+    mode: str = "train"                  # train | prefill | decode
+    positions: Optional[jnp.ndarray] = None    # (B,) decode positions
+    rope: Optional[Tuple] = None         # precomputed (cos, sin)
+    enc_out: Optional[jnp.ndarray] = None      # whisper cross-attn memory
+    act_dtype: Any = jnp.bfloat16
+    use_pallas: Optional[bool] = False
+    block_q: int = 512
+    block_k: int = 512
+    mamba_chunk: int = 128
+    mlstm_chunk: int = 256
+    attn_compute_dtype: Any = jnp.float32
+    moe_dispatch: str = "global"         # global | batch_local
+
+    def c(self, x, *axes):
+        return constrain(x, self.rules, self.mesh, *axes)
+
+
+# --------------------------------------------------------------------------
+# Norms.
+# --------------------------------------------------------------------------
+
+def spec_rmsnorm(d: int) -> Dict:
+    return {"scale": ParamSpec((d,), ("embed",), "ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE.
+# --------------------------------------------------------------------------
+
+def rope_tables(positions, dim: int, theta: float):
+    """positions: (...,) int -> cos/sin (..., dim/2) fp32."""
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_tables(pos_thw, dim: int, theta: float, sections=(0.25, 0.375, 0.375)):
+    """Qwen2-VL M-RoPE: rotary dims split into (t, h, w) sections.
+
+    pos_thw: (3, ...) int position ids. Returns cos/sin (..., dim/2).
+    """
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    n_t = int(half * sections[0])
+    n_h = int(half * sections[1])
+    sec = jnp.concatenate([
+        jnp.zeros((n_t,), jnp.int32),
+        jnp.ones((n_h,), jnp.int32),
+        jnp.full((half - n_t - n_h,), 2, jnp.int32)])
+    # per rotary index j, position = pos_thw[sec[j]]
+    p = jnp.moveaxis(pos_thw, 0, -1)                       # (..., 3)
+    pos_per_freq = jnp.take(p, sec, axis=-1)               # (..., half)
+    ang = pos_per_freq.astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, S, D/2) or (B, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2 and cos.shape[0] == x.shape[1]:        # (S, half)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    elif cos.ndim == 2:                                     # (B, half) decode
+        cos = cos[:, None, None, :]
+        sin = sin[:, None, None, :]
+    else:                                                   # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def text_mrope_positions(batch: int, seq: int, frontend_len: int,
+                         offset=0):
+    """(3, B, S) ids: vision prefix gets (t=0, h=i//g, w=i%g) grid ids."""
+    idx = jnp.arange(seq) + offset
+    t = jnp.where(idx < frontend_len, 0, idx)
+    g = max(int(math.sqrt(max(frontend_len, 1))), 1)
+    h = jnp.where(idx < frontend_len, idx // g, idx)
+    w = jnp.where(idx < frontend_len, idx % g, idx)
+    ids = jnp.stack([t, h, w])                              # (3, S)
+    return jnp.broadcast_to(ids[:, None, :], (3, batch, seq))
+
+
+# --------------------------------------------------------------------------
+# GQA attention.
+# --------------------------------------------------------------------------
+
+def spec_attention(cfg, cross: bool = False) -> Dict:
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": ParamSpec((d, H * dh), ("embed", "heads")),
+        "wk": ParamSpec((d, KV * dh), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, KV * dh), ("embed", "kv_heads")),
+        "wo": ParamSpec((H * dh, d), ("heads", "embed")),
+    }
+    return spec
+
+
+def _split_heads(x, n, dh):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, dh)
+
+
+def apply_attention(p, x, ctx: Ctx, *, causal=True, window=None,
+                    cache=None, kv_input=None, use_rope=True,
+                    is_cross=False):
+    """x: (B, S, d). cache: {'k','v'} (B, KV, S_max, dh) for decode.
+
+    Returns (y, new_cache). kv_input overrides the KV source (cross-attn
+    at train/prefill); at decode a cross block reads its cached encoder
+    memory and never writes the cache.
+    """
+    cfg = ctx.cfg
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    B, S, _ = x.shape
+    dt = x.dtype
+
+    q = _split_heads(x @ p["wq"].astype(dt), H, dh)
+    src = x if kv_input is None else kv_input.astype(dt)
+    if not (is_cross and ctx.mode == "decode"):
+        k = _split_heads(src @ p["wk"].astype(dt), KV, dh)
+        v = _split_heads(src @ p["wv"].astype(dt), KV, dh)
+    else:
+        k = v = None                    # cross-attn decode: cache holds k/v
+
+    if use_rope and ctx.rope is not None and not is_cross:
+        cos, sin = ctx.rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if ctx.mode == "decode" and not is_cross:
+        # self-attn decode: write the token into the cache ring
+        pos = ctx.positions                                 # (B,)
+        s_max = cache["k"].shape[2]
+        widx = pos % s_max if window is not None else jnp.minimum(pos, s_max - 1)
+        k_t = jnp.swapaxes(k, 1, 2)                         # (B, KV, 1, dh)
+        v_t = jnp.swapaxes(v, 1, 2)
+        bidx = jnp.arange(B)
+        new_k = cache["k"].at[bidx, :, widx].set(
+            k_t[:, :, 0].astype(cache["k"].dtype))
+        new_v = cache["v"].at[bidx, :, widx].set(
+            v_t[:, :, 0].astype(cache["v"].dtype))
+        lengths = jnp.minimum(pos + 1, s_max)
+        q_t = jnp.swapaxes(q, 1, 2)                         # (B, H, 1, dh)
+        o = ops.decode_attention(q_t, new_k, new_v, lengths,
+                                 use_pallas=ctx.use_pallas)
+        y = jnp.swapaxes(o, 1, 2).reshape(B, S, H * dh)
+        new_cache = {"k": new_k, "v": new_v}
+    elif ctx.mode == "decode":
+        # cross-attn decode: attend to the fixed encoder memory in cache
+        q_t = jnp.swapaxes(q, 1, 2)
+        s_enc = cache["k"].shape[2]
+        lengths = jnp.full((B,), s_enc, jnp.int32)
+        o = ops.decode_attention(q_t, cache["k"], cache["v"], lengths,
+                                 use_pallas=ctx.use_pallas)
+        y = jnp.swapaxes(o, 1, 2).reshape(B, S, H * dh)
+        new_cache = cache
+    else:
+        qh = jnp.swapaxes(q, 1, 2)                          # (B, H, S, dh)
+        kh = jnp.swapaxes(k, 1, 2)
+        vh = jnp.swapaxes(v, 1, 2)
+        o = ops.flash_attention(qh, kh, vh, causal=causal, window=window,
+                                block_q=ctx.block_q, block_k=ctx.block_k,
+                                use_pallas=ctx.use_pallas,
+                                compute_dtype=ctx.attn_compute_dtype)
+        y = jnp.swapaxes(o, 1, 2).reshape(B, S, H * dh)
+        new_cache = None
+        if ctx.mode == "prefill":
+            # self-attn: the running KV; cross-attn: the (fixed) encoder
+            # memory projections, reused by every decode step
+            new_cache = {"k": kh.astype(dt), "v": vh.astype(dt)}
+    y = ctx.c(y, "batch", "seq", "heads")
+    return y @ p["wo"].astype(dt), new_cache
+
+
+# --------------------------------------------------------------------------
+# Dense MLPs.
+# --------------------------------------------------------------------------
+
+def spec_mlp(cfg) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "wi": ParamSpec((d, 2 * f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p, x, ctx: Ctx):
+    cfg = ctx.cfg
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if cfg.mlp_kind == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    h = ctx.c(h, "batch", "seq", "mlp")
+    return h @ p["wo"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Top-k MoE with capacity-based dispatch (GShard-style, static shapes).
+# --------------------------------------------------------------------------
+
+def spec_moe(cfg) -> Dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, E), ("embed", None), scale=0.02),
+        "wi": ParamSpec((E, d, 2 * f), ("experts", "embed", "mlp")),
+        "wo": ParamSpec((E, f, d), ("experts", "mlp", "embed")),
+    }
+
+
+def apply_moe(p, x, ctx: Ctx):
+    """Token-dropping top-k dispatch, two layouts:
+
+    * ``global``  - one global (E, C, d) buffer; GSPMD turns the scatter/
+      gather into all-gathers of the whole buffer (the measured baseline
+      collective bottleneck; EXPERIMENTS.md §Perf).
+    * ``batch_local`` - dispatch within each batch row: buffer
+      (B, E, C_row, d) with B sharded over data, scatter indices local to
+      the row => zero dispatch collectives; only the TP reduction of the
+      grouped GEMMs remains. Finer-grained capacity => slightly higher
+      drop variance (standard per-batch dispatch trade).
+
+    Active FLOPs = top_k x dense-FFN either way.
+    """
+    if ctx.moe_dispatch == "batch_local":
+        return _apply_moe_batch_local(p, x, ctx)
+    cfg = ctx.cfg
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = max(1, int(math.ceil(T * k / E * cfg.capacity_factor)))
+    dt = x.dtype
+
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                     # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert buffer
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)        # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                    # (T*k, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(T, k)         # (T, k)
+    keep = pos < C
+    slot = jnp.where(keep, eidx * C + pos, E * C)            # overflow -> trash
+
+    buf = jnp.zeros((E * C + 1, d), dt).at[slot.reshape(-1)].add(
+        jnp.repeat(xt, k, axis=0).reshape(T, k, d).reshape(T * k, d))
+    buf = buf[:-1].reshape(E, C, d)
+    buf = ctx.c(buf, "experts", "batch", "embed")
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(dt))  # (E, C, 2f)
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    h = ctx.c(h, "experts", "batch", "mlp")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+    out_buf = jnp.concatenate(
+        [out_buf.reshape(E * C, d), jnp.zeros((1, d), dt)], axis=0)
+
+    y = out_buf[slot.reshape(-1)].reshape(T, k, d)
+    y = jnp.sum(y * (gate * keep).astype(dt)[..., None], axis=1)
+    # aux: load-balancing loss term (Switch) exposed via ctx-free return
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, d), aux
+
+
+def _apply_moe_batch_local(p, x, ctx: Ctx):
+    cfg = ctx.cfg
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(math.ceil(S * k / E * cfg.capacity_factor)))
+    dt = x.dtype
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)    # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                     # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)        # (B, S, k, E)
+    flat = onehot.reshape(B, S * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # (B, S*k, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(B, S, k)
+    keep = pos < C
+    slot = jnp.where(keep, eidx * C + pos, E * C)            # (B, S, k)
+
+    xrep = jnp.broadcast_to(x[:, :, None, :], (B, S, k, d)).reshape(
+        B, S * k, d)
+    bidx = jnp.arange(B)[:, None]
+    buf = jnp.zeros((B, E * C + 1, d), dt).at[
+        bidx, slot.reshape(B, S * k)].add(xrep)
+    buf = buf[:, :-1].reshape(B, E, C, d)
+    buf = ctx.c(buf, "batch", "experts", None, "embed")
+
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(dt))
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    h = ctx.c(h, "batch", "experts", None, "mlp")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"].astype(dt))
+    out_buf = jnp.concatenate(
+        [out_buf.reshape(B, E * C, d), jnp.zeros((B, 1, d), dt)], axis=1)
+
+    y = out_buf[bidx, slot.reshape(B, S * k)].reshape(B, S, k, d)
+    y = jnp.sum(y * (gate * keep).astype(dt)[..., None], axis=2)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 block.
+# --------------------------------------------------------------------------
+
+def spec_mamba2(cfg) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    N = cfg.ssm_state or 64
+    H = di // min(64, di)            # head channel size P = 64
+    P = di // H
+    return {
+        "w_in": ParamSpec((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamSpec((4, di), ("conv_k", "inner"), scale=0.5),
+        "w_bc": ParamSpec((di, 2 * N), ("inner", "state")),
+        "w_dt": ParamSpec((di, H), ("inner", None), scale=0.02),
+        "dt_bias": ParamSpec((H,), (None,), "zeros"),
+        "a_log": ParamSpec((H,), (None,), "zeros"),
+        "d_skip": ParamSpec((H,), (None,), "ones"),
+        "w_out": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def mamba_dims(cfg):
+    di = cfg.d_inner
+    H = di // min(64, di)
+    return di, H, di // H, cfg.ssm_state or 64
+
+
+def apply_mamba2(p, x, ctx: Ctx, cache=None):
+    """cache: {'conv': (B, 3, di), 'h': (B, H, P, N)} for decode."""
+    cfg = ctx.cfg
+    di, H, P, N = mamba_dims(cfg)
+    B, S, d = x.shape
+    dt_ = x.dtype
+
+    xz = x @ p["w_in"].astype(dt_)                          # (B, S, 2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = ctx.c(xs, "batch", "seq", "inner")
+
+    conv_w = p["conv_w"].astype(jnp.float32)                # (4, di)
+    if ctx.mode == "decode":
+        hist = jnp.concatenate(
+            [cache["conv"].astype(dt_), xs], axis=1)        # (B, 4, di)
+        new_conv = hist[:, 1:]
+        xc = jnp.einsum("bkd,kd->bd", hist.astype(jnp.float32),
+                        conv_w)[:, None, :]
+    else:
+        pad = jnp.pad(xs.astype(jnp.float32), ((0, 0), (3, 0), (0, 0)))
+        xc = sum(pad[:, i:i + S] * conv_w[i] for i in range(4))
+        new_conv = pad[:, S: S + 3].astype(dt_) if S >= 3 else None
+    xc = jax.nn.silu(xc).astype(dt_)                        # (B, S, di)
+
+    bc = xc @ p["w_bc"].astype(dt_)                         # (B, S, 2N)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt_pre = xc @ p["w_dt"].astype(dt_)                     # (B, S, H)
+    dtv = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    xh = xc.reshape(B, S, H, P)
+
+    if ctx.mode == "decode":
+        y, h_new = ops.mamba_decode_step(
+            cache["h"], xh[:, 0], dtv[:, 0], p["a_log"], bmat[:, 0], cmat[:, 0])
+        y = y[:, None]                                      # (B, 1, H, P)
+        new_cache = {"conv": new_conv, "h": h_new}
+    else:
+        y, h_final = ops.mamba_scan(xh, dtv, p["a_log"], bmat, cmat,
+                                    chunk=ctx.mamba_chunk,
+                                    use_pallas=ctx.use_pallas)
+        new_cache = None
+        if ctx.mode == "prefill":
+            conv_tail = jnp.pad(xs.astype(dt_), ((0, 0), (3, 0), (0, 0)))[:, S:S + 3]
+            new_cache = {"conv": conv_tail, "h": h_final}
+    y = y + xh * p["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    y = ctx.c(y, "batch", "seq", "inner")
+    return y @ p["w_out"].astype(dt_), new_cache
+
+
+# --------------------------------------------------------------------------
+# xLSTM blocks.
+# --------------------------------------------------------------------------
+
+def spec_mlstm(cfg) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    H = cfg.n_heads
+    return {
+        "w_qkv": ParamSpec((d, 3 * di), ("embed", "inner")),
+        "w_if": ParamSpec((d, 2 * H), ("embed", None), scale=0.02),
+        "b_if": ParamSpec((2 * H,), (None,), "zeros"),
+        "w_out": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def apply_mlstm(p, x, ctx: Ctx, cache=None):
+    """cache: (C (B,H,P,P), n (B,H,P), m (B,H)) for decode."""
+    cfg = ctx.cfg
+    B, S, d = x.shape
+    di, H = cfg.d_inner, cfg.n_heads
+    P = di // H
+    dt_ = x.dtype
+
+    qkv = x @ p["w_qkv"].astype(dt_)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = ctx.c(q.reshape(B, S, H, P), "batch", "seq", "heads")
+    k = ctx.c(k.reshape(B, S, H, P), "batch", "seq", "heads")
+    v = ctx.c(v.reshape(B, S, H, P), "batch", "seq", "heads")
+    gates = (x @ p["w_if"].astype(dt_)).astype(jnp.float32) + \
+        p["b_if"].astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)             # (B, S, H)
+
+    if ctx.mode == "decode":
+        h, state = ops.mlstm_decode_step(
+            cache, q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0])
+        h = h[:, None]
+        new_cache = state
+    else:
+        h, state = ops.mlstm_scan(q, k, v, i_pre, f_pre,
+                                  chunk=ctx.mlstm_chunk,
+                                  use_pallas=ctx.use_pallas)
+        new_cache = state if ctx.mode == "prefill" else None
+    h = h.reshape(B, S, di)
+    h = ctx.c(h, "batch", "seq", "inner")
+    return h @ p["w_out"].astype(dt_), new_cache
+
+
+def spec_slstm(cfg) -> Dict:
+    d = cfg.d_model
+    return {
+        "w_x": ParamSpec((d, 4 * d), ("embed", "mlp")),
+        "w_h": ParamSpec((d, 4 * d), ("embed", "mlp")),
+        "bias": ParamSpec((4 * d,), ("mlp",), "zeros"),
+    }
+
+
+def apply_slstm(p, x, ctx: Ctx, cache=None):
+    """Sequential scalar-LSTM with exponential gating (true recurrence).
+
+    cache: (c, n, h, m) each (B, d) for decode.
+    """
+    B, S, d = x.shape
+    dt_ = x.dtype
+    wx = p["w_x"].astype(jnp.float32)
+    wh = p["w_h"].astype(jnp.float32)
+    bias = p["bias"].astype(jnp.float32)
+    xproj = x.astype(jnp.float32) @ wx + bias               # (B, S, 4d)
+
+    if cache is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.zeros((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+        m0 = jnp.full((B, d), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = [t.astype(jnp.float32) for t in cache]
+
+    hs, (cT, nT, hT, mT) = ops.slstm_scan(xproj, wh, c0, n0, h0, m0)
+    y = hs.astype(dt_)
+    new_cache = (cT, nT, hT, mT) if ctx.mode in ("prefill", "decode") else None
+    return y, new_cache

@@ -1,0 +1,432 @@
+"""The generic LM: embedding -> scanned pattern units -> norm -> head.
+
+One model covers all 10 assigned architectures, driven by ArchConfig:
+the repeating block pattern (cfg.pattern_unit()) is stacked along a
+leading "unit" axis and iterated with lax.scan, keeping the HLO O(1) in
+depth (compile-time critical: the dry-run compiles 80 (arch x shape x
+mesh) cells). Zamba2's shared attention block lives OUTSIDE the scan
+(loop-invariant closure => weights broadcast once), whisper adds an
+encoder scan + per-decoder-unit cross-attention.
+
+Entry points:
+  init / abstract_params            parameter trees (ParamSpec)
+  forward                           logits for train/prefill
+  loss                              next-token CE + MoE aux
+  init_cache / decode_step          serving (one token vs KV cache)
+  forward_segment                   SL split execution [lo, hi) blocks
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.param import ParamSpec, is_spec
+
+
+# --------------------------------------------------------------------------
+# Param specs.
+# --------------------------------------------------------------------------
+
+def _block_spec(cfg, kind: str) -> Dict:
+    d = cfg.d_model
+    if kind in ("attn", "shared_attn", "moe"):
+        spec = {"norm1": L.spec_rmsnorm(d), "attn": L.spec_attention(cfg)}
+        if cfg.enc_dec:
+            spec["norm_x"] = L.spec_rmsnorm(d)
+            spec["cross"] = L.spec_attention(cfg, cross=True)
+        if cfg.d_ff:
+            spec["norm2"] = L.spec_rmsnorm(d)
+            spec["mlp"] = L.spec_moe(cfg) if kind == "moe" else L.spec_mlp(cfg)
+        return spec
+    if kind == "mamba2":
+        return {"norm1": L.spec_rmsnorm(d), "mamba": L.spec_mamba2(cfg)}
+    if kind == "mlstm":
+        return {"norm1": L.spec_rmsnorm(d), "mlstm": L.spec_mlstm(cfg)}
+    if kind == "slstm":
+        return {"norm1": L.spec_rmsnorm(d), "slstm": L.spec_slstm(cfg)}
+    raise ValueError(kind)
+
+
+def _unit_spec(cfg) -> Dict:
+    return {f"{j}:{kind}": _block_spec(cfg, kind)
+            for j, kind in enumerate(cfg.pattern_unit())
+            if kind != "shared_attn"}
+
+
+def _stack(tree, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("unit",) + s.axes, s.init, s.scale,
+                            s.dtype),
+        tree, is_leaf=is_spec)
+
+
+def abstract_params(cfg) -> Dict:
+    d, V = cfg.d_model, cfg.vocab
+    tree: Dict[str, Any] = {
+        "embed": ParamSpec((V, d), ("vocab", "embed"), "embed"),
+        "units": _stack(_unit_spec(cfg), cfg.n_units),
+        "final_norm": L.spec_rmsnorm(d),
+    }
+    if "shared_attn" in cfg.pattern_unit():
+        tree["shared"] = _block_spec(cfg, "shared_attn")
+    if not cfg.tie_embeddings:
+        tree["head"] = ParamSpec((d, V), ("embed", "vocab"))
+    if cfg.enc_dec:
+        enc_cfg = dataclasses.replace(cfg, enc_dec=False, causal=False)
+        tree["enc_units"] = _stack(
+            {"0:attn": _block_spec(enc_cfg, "attn")}, cfg.n_enc_layers)
+        tree["enc_norm"] = L.spec_rmsnorm(d)
+    return tree
+
+
+def init(cfg, rng) -> Dict:
+    from repro.models.param import init_params
+    return init_params(abstract_params(cfg), rng)
+
+
+# --------------------------------------------------------------------------
+# Positional tables.
+# --------------------------------------------------------------------------
+
+def _sinusoid(S: int, d: int):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _rope_for(cfg, batch: int, seq: int, positions=None,
+              frontend_len: int = 0):
+    """cos/sin tables. positions: (B,) decode positions or None (0..S)."""
+    dh = cfg.head_dim
+    if cfg.enc_dec:
+        return None                     # whisper: absolute sinusoid instead
+    if cfg.mrope:
+        if positions is None:
+            ids = L.text_mrope_positions(batch, seq, frontend_len)
+        else:
+            ids = jnp.broadcast_to(positions[None, :, None], (3, batch, 1))
+        return L.mrope_tables(ids, dh, cfg.rope_theta)
+    if positions is None:
+        return L.rope_tables(jnp.arange(seq), dh, cfg.rope_theta)
+    return L.rope_tables(positions, dh, cfg.rope_theta)
+
+
+# --------------------------------------------------------------------------
+# Block application.
+# --------------------------------------------------------------------------
+
+def _apply_block(kind: str, p, x, ctx: L.Ctx, cache):
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    cache = cache or {}
+
+    if kind in ("attn", "shared_attn", "moe"):
+        h, nc = L.apply_attention(
+            p["attn"], L.rmsnorm(p["norm1"], x, cfg.norm_eps), ctx,
+            causal=cfg.causal, window=cfg.window,
+            cache=cache.get("attn"), use_rope=not cfg.enc_dec)
+        x = x + h
+        if nc is not None:
+            new_cache["attn"] = nc
+        if cfg.enc_dec and "cross" in p:
+            h, nc = L.apply_attention(
+                p["cross"], L.rmsnorm(p["norm_x"], x, cfg.norm_eps), ctx,
+                causal=False, cache=cache.get("cross"),
+                kv_input=ctx.enc_out, use_rope=False, is_cross=True)
+            x = x + h
+            if nc is not None:
+                new_cache["cross"] = nc
+        if cfg.d_ff:
+            xn = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+            if kind == "moe":
+                h, aux = L.apply_moe(p["mlp"], xn, ctx)
+            else:
+                h = L.apply_mlp(p["mlp"], xn, ctx)
+            x = x + h
+    elif kind == "mamba2":
+        h, nc = L.apply_mamba2(p["mamba"],
+                               L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                               ctx, cache=cache.get("mamba"))
+        x = x + h
+        if nc is not None:
+            new_cache["mamba"] = nc
+    elif kind == "mlstm":
+        h, nc = L.apply_mlstm(p["mlstm"],
+                              L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                              ctx, cache=cache.get("mlstm"))
+        x = x + h
+        if nc is not None:
+            new_cache["mlstm"] = nc
+    elif kind == "slstm":
+        h, nc = L.apply_slstm(p["slstm"],
+                              L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                              ctx, cache=cache.get("slstm"))
+        x = x + h
+        if nc is not None:
+            new_cache["slstm"] = nc
+    else:
+        raise ValueError(kind)
+    x = ctx.c(x, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+def _apply_unit(cfg, unit_params, shared_params, x, ctx: L.Ctx, unit_cache):
+    new_caches = {}
+    aux = jnp.zeros((), jnp.float32)
+    for j, kind in enumerate(cfg.pattern_unit()):
+        key = f"{j}:{kind}"
+        p = shared_params if kind == "shared_attn" else unit_params[key]
+        c = unit_cache.get(key) if unit_cache else None
+        x, nc, a = _apply_block(kind, p, x, ctx, c)
+        aux = aux + a
+        if nc:
+            new_caches[key] = nc
+    return x, new_caches, aux
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill).
+# --------------------------------------------------------------------------
+
+def _embed_tokens(cfg, params, tokens, act_dtype):
+    return jnp.take(params["embed"], tokens, axis=0).astype(act_dtype)
+
+
+def _run_encoder(cfg, params, enc_frames, ctx: L.Ctx, unroll: int = 1):
+    """Whisper encoder over (stub) frame embeddings."""
+    S = enc_frames.shape[1]
+    x = enc_frames.astype(ctx.act_dtype) + \
+        _sinusoid(S, cfg.d_model).astype(ctx.act_dtype)[None]
+    enc_cfg = dataclasses.replace(cfg, enc_dec=False, causal=False)
+    ectx = dataclasses.replace(ctx, cfg=enc_cfg, mode="train", rope=None)
+
+    def unit_fn(h, up):
+        h, _, _ = _apply_unit(enc_cfg, up, None, h, ectx, None)
+        return h, None
+
+    x, _ = jax.lax.scan(unit_fn, x, params["enc_units"], unroll=unroll)
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(cfg, params, tokens, *, ctx: L.Ctx, frontend_embed=None,
+            enc_frames=None, remat: str = "full", unroll: int = 1):
+    """Full-sequence logits. mode = train (no cache) or prefill (cache out).
+
+    Returns (logits fp32, aux_loss, caches_or_None).
+    """
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, params, tokens, ctx.act_dtype)
+    if cfg.frontend == "vision" and frontend_embed is not None:
+        F = cfg.frontend_len
+        x = jnp.concatenate(
+            [frontend_embed.astype(ctx.act_dtype), x[:, F:]], axis=1)
+    if cfg.enc_dec:
+        x = x + _sinusoid(S, cfg.d_model).astype(ctx.act_dtype)[None]
+        enc_out = _run_encoder(cfg, params, enc_frames, ctx, unroll=unroll)
+        ctx = dataclasses.replace(ctx, enc_out=enc_out)
+    F = cfg.frontend_len if (cfg.frontend == "vision"
+                             and frontend_embed is not None) else 0
+    ctx = dataclasses.replace(ctx, rope=_rope_for(cfg, B, S, frontend_len=F))
+    x = ctx.c(x, "batch", "seq", "embed")
+
+    shared = params.get("shared")
+    collect_cache = ctx.mode == "prefill"
+
+    def unit_fn(h, up):
+        h, caches, aux = _apply_unit(cfg, up, shared, h, ctx, None)
+        return h, (caches if collect_cache else None, aux)
+
+    if remat == "full":
+        unit_fn = jax.checkpoint(unit_fn)
+    elif remat == "dots":
+        unit_fn = jax.checkpoint(
+            unit_fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    x, (caches, auxs) = jax.lax.scan(unit_fn, x, params["units"],
+                                     unroll=unroll)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(cfg, params, x)
+    return logits, jnp.sum(auxs), caches
+
+
+def _head(cfg, params, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def loss(cfg, params, tokens, labels, *, ctx: L.Ctx,
+         frontend_embed=None, enc_frames=None, remat: str = "full",
+         aux_weight: float = 0.01, unroll: int = 1):
+    """Next-token CE (labels = targets aligned to positions; -1 = pad)."""
+    logits, aux, _ = forward(cfg, params, tokens, ctx=ctx,
+                             frontend_embed=frontend_embed,
+                             enc_frames=enc_frames, remat=remat,
+                             unroll=unroll)
+    mask = (labels >= 0)
+    if cfg.frontend == "vision":
+        pos = jnp.arange(labels.shape[1])[None, :]
+        mask = mask & (pos >= cfg.frontend_len)
+    labels_c = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    ce = (lse - ll) * mask
+    n = jnp.maximum(jnp.sum(mask), 1)
+    ce_mean = jnp.sum(ce) / n
+    return ce_mean + aux_weight * aux, {"ce": ce_mean, "aux": aux,
+                                        "ntok": n}
+
+
+# --------------------------------------------------------------------------
+# Serving: cache init + single-token decode.
+# --------------------------------------------------------------------------
+
+def _block_cache_shapes(cfg, kind: str, batch: int, s_max: int,
+                        act_dtype) -> Dict:
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    out: Dict[str, Any] = {}
+    if kind in ("attn", "shared_attn", "moe"):
+        s_eff = min(cfg.window, s_max) if cfg.window else s_max
+        out["attn"] = {
+            "k": jnp.zeros((batch, KV, s_eff, dh), act_dtype),
+            "v": jnp.zeros((batch, KV, s_eff, dh), act_dtype)}
+        if cfg.enc_dec:
+            out["cross"] = {
+                "k": jnp.zeros((batch, KV, cfg.frontend_len, dh), act_dtype),
+                "v": jnp.zeros((batch, KV, cfg.frontend_len, dh), act_dtype)}
+    elif kind == "mamba2":
+        di, H, P, N = L.mamba_dims(cfg)
+        out["mamba"] = {"conv": jnp.zeros((batch, 3, di), act_dtype),
+                        "h": jnp.zeros((batch, H, P, N), jnp.float32)}
+    elif kind == "mlstm":
+        H = cfg.n_heads
+        P = cfg.d_inner // H
+        out["mlstm"] = (jnp.zeros((batch, H, P, P), jnp.float32),
+                        jnp.zeros((batch, H, P), jnp.float32),
+                        jnp.full((batch, H), -1e30, jnp.float32))
+    elif kind == "slstm":
+        d = cfg.d_model
+        out["slstm"] = tuple(
+            jnp.full((batch, d), -1e30 if i == 3 else 0.0, jnp.float32)
+            for i in range(4))
+    return out
+
+
+def init_cache(cfg, batch: int, s_max: int, act_dtype=jnp.bfloat16) -> Dict:
+    """Per-unit stacked cache pytree (leading axis n_units)."""
+    unit = {f"{j}:{kind}": _block_cache_shapes(cfg, kind, batch, s_max,
+                                               act_dtype)
+            for j, kind in enumerate(cfg.pattern_unit())}
+    unit = {k: v for k, v in unit.items() if v}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_units,) + a.shape).copy()
+        if not isinstance(a, (int, float)) else a, unit)
+
+
+def cache_from_prefill(cfg, caches, s_max: int, act_dtype=jnp.bfloat16):
+    """Convert ``forward(mode=prefill)`` caches into a decode cache of
+    capacity ``s_max`` (ring-indexed for sliding-window attention).
+
+    Recurrent states (mamba/mlstm/slstm) pass through; full-attention
+    K/V pads to s_max; SWA K/V scatters the last ``window`` positions
+    into their ring slots (slot = pos % window), matching the decode
+    write index.
+    """
+    def ring(kv):
+        U, B, KV, S, dh = kv.shape
+        s_eff = min(cfg.window, s_max) if cfg.window else s_max
+        out = jnp.zeros((U, B, KV, s_eff, dh), act_dtype)
+        take = min(S, s_eff)
+        slots = jnp.arange(S - take, S) % s_eff
+        return out.at[:, :, :, slots, :].set(
+            kv[:, :, :, S - take:, :].astype(act_dtype))
+
+    out = {}
+    for key, blk in caches.items():
+        out[key] = {}
+        for sub, val in blk.items():
+            if sub == "attn":                    # self-attn KV -> ring/pad
+                out[key][sub] = {kk: ring(vv) for kk, vv in val.items()}
+            elif sub == "cross":                 # fixed encoder memory
+                out[key][sub] = jax.tree.map(
+                    lambda a: a.astype(act_dtype), val)
+            else:                                # recurrent states pass through
+                out[key][sub] = val
+    return out
+
+
+def decode_step(cfg, params, cache, tokens, positions, *, ctx: L.Ctx,
+                unroll: int = 1):
+    """One decode step. tokens: (B, 1); positions: (B,).
+
+    Returns (logits (B, 1, V) fp32, new_cache).
+    """
+    B = tokens.shape[0]
+    x = _embed_tokens(cfg, params, tokens, ctx.act_dtype)
+    if cfg.enc_dec:
+        pos_emb = _sinusoid(1 << 17, cfg.d_model)  # static table, gathered
+        x = x + pos_emb[positions][:, None].astype(ctx.act_dtype)
+    ctx = dataclasses.replace(
+        ctx, mode="decode", positions=positions,
+        rope=_rope_for(cfg, B, 1, positions=positions))
+    shared = params.get("shared")
+
+    def unit_fn(h, inp):
+        up, uc = inp
+        h, new_c, _ = _apply_unit(cfg, up, shared, h, ctx, uc)
+        return h, new_c
+
+    x, new_cache = jax.lax.scan(unit_fn, x, (params["units"], cache),
+                                unroll=unroll)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _head(cfg, params, x), new_cache
+
+
+# --------------------------------------------------------------------------
+# Split-learning segment execution (the paper's cut, on a real model).
+# --------------------------------------------------------------------------
+
+def n_blocks(cfg) -> int:
+    return cfg.n_units * len(cfg.pattern_unit())
+
+
+def _unit_slice(params_units, u: int):
+    return jax.tree.map(lambda a: a[u], params_units)
+
+
+def forward_segment(cfg, params, x, lo: int, hi: int, *, ctx: L.Ctx,
+                    tokens=None, unit_offset: int = 0):
+    """Apply blocks [lo, hi). lo==0 consumes ``tokens`` via the embedding;
+    hi==n_blocks applies final norm + head. Python-loop (non-scanned) path
+    used by the SL constellation driver on ground/satellite segments.
+    ``unit_offset``: params["units"] holds units starting at this index
+    (segment trees are slices of the full stacked tree).
+    """
+    pat = cfg.pattern_unit()
+    if lo == 0:
+        assert tokens is not None
+        x = _embed_tokens(cfg, params, tokens, ctx.act_dtype)
+        B, S = tokens.shape
+    else:
+        B, S = x.shape[0], x.shape[1]
+    ctx = dataclasses.replace(ctx, rope=_rope_for(cfg, B, S))
+    for idx in range(lo, hi):
+        u, j = divmod(idx, len(pat))
+        kind = pat[j]
+        p = (params.get("shared") if kind == "shared_attn"
+             else _unit_slice(params["units"], u - unit_offset)[f"{j}:{kind}"])
+        x, _, _ = _apply_block(kind, p, x, ctx, None)
+    if hi == n_blocks(cfg):
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return _head(cfg, params, x)
+    return x

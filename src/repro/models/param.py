@@ -1,0 +1,159 @@
+"""Abstract parameter machinery: one source of truth for shapes, init,
+logical sharding axes and dtype.
+
+A model defines a pytree of :class:`ParamSpec` (``abstract_params``); the
+same tree materializes as
+  * real arrays          (:func:`init_params`),
+  * ShapeDtypeStructs    (:func:`shape_structs`, for .lower without alloc),
+  * PartitionSpecs       (:func:`partition_specs`, logical->mesh rules).
+
+Logical axis names used across the zoo:
+  batch seq embed mlp heads kv_heads head_dim vocab experts layers
+  conv_k inner state unit
+Rules map each to a mesh axis (or None = replicated, or a tuple).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim
+    init: str = "normal"                     # normal|zeros|ones|embed
+    scale: Optional[float] = None            # None => 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map_specs(f: Callable[[ParamSpec], Any], tree):
+    return jax.tree.map(f, tree, is_leaf=is_spec)
+
+
+def shape_structs(tree):
+    return _tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def init_params(tree, rng: jax.Array):
+    """Materialize a ParamSpec tree into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    out = []
+    for spec, key in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+            if spec.init == "embed":
+                scale = spec.scale if spec.scale is not None else 0.02
+            out.append((jax.random.normal(key, spec.shape, jnp.float32)
+                        * scale).astype(spec.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Logical -> physical sharding rules.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names to mesh axis names.
+
+    Values may be a mesh-axis name, a tuple of names, or None (replicate).
+    ``resolve`` drops axes that are absent from the mesh, so one rule set
+    serves both the (data, model) and (pod, data, model) meshes.
+    """
+
+    batch: Any = ("pod", "data")
+    seq: Any = None                  # sequence sharding (activations only)
+    embed: Any = None
+    mlp: Any = "model"
+    heads: Any = "model"
+    kv_heads: Any = "model"
+    head_dim: Any = None
+    vocab: Any = "model"
+    experts: Any = None              # expert-parallel axis (hillclimb knob)
+    inner: Any = "model"             # mamba/mlstm inner channels
+    state: Any = None
+    layers: Any = None
+    unit: Any = None
+    conv_k: Any = None
+    frontend: Any = None
+    zero: Any = "data"               # optimizer-state (ZeRO) sharding axis
+
+    def lookup(self, logical: Optional[str]) -> Any:
+        if logical is None:
+            return None
+        return getattr(self, logical)
+
+    def resolve(self, axes: Sequence[Optional[str]], mesh,
+                shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for a tuple of logical axes against a mesh.
+
+        With ``shape``, axes whose mesh extent does not divide the dim are
+        dropped (e.g. 15 attention heads on a 16-way model axis, or
+        granite's 49155-row vocab) — the dim stays replicated, which is
+        exactly what a production partitioner would fall back to.
+        """
+        names = set(mesh.axis_names)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        used = set()
+        out = []
+        for i, ax in enumerate(axes):
+            phys = self.lookup(ax)
+            if phys is None:
+                out.append(None)
+                continue
+            if isinstance(phys, str):
+                phys = (phys,)
+            keep = tuple(p for p in phys if p in names and p not in used)
+            if shape is not None and keep:
+                extent = 1
+                for p in keep:
+                    extent *= sizes[p]
+                if shape[i] % extent != 0:
+                    keep = ()
+            used.update(keep)
+            if len(keep) == 0:
+                out.append(None)
+            elif len(keep) == 1:
+                out.append(keep[0])
+            else:
+                out.append(keep)
+        return P(*out)
+
+
+def partition_specs(tree, rules: ShardingRules, mesh):
+    return _tree_map_specs(lambda s: rules.resolve(s.axes, mesh, s.shape), tree)
+
+
+def named_shardings(tree, rules: ShardingRules, mesh):
+    from jax.sharding import NamedSharding
+    return _tree_map_specs(
+        lambda s: NamedSharding(mesh, rules.resolve(s.axes, mesh, s.shape)),
+        tree)
+
+
+def constrain(x, rules: ShardingRules, mesh, *logical_axes):
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    if mesh is None:
+        return x
+    spec = rules.resolve(logical_axes, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

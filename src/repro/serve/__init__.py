@@ -1,0 +1,2 @@
+"""Serving: KV-cache decode engine with batched requests."""
+from repro.serve.engine import DecodeEngine, Request

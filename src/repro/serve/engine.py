@@ -1,0 +1,103 @@
+"""A small batched serving engine: continuous-batching decode over the
+LM's KV cache (full / sliding-window / SSM-state, per architecture).
+
+Slots hold independent requests; finished slots are refilled from the
+queue without stopping the batch (continuous batching a la Orca/vLLM,
+adapted to the static-shape jit step). Prefill runs per-request via
+``forward`` in prefill mode and its cache is spliced into the slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.layers import Ctx
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+
+
+class DecodeEngine:
+    """Greedy decoding over ``n_slots`` concurrent requests."""
+
+    def __init__(self, cfg, params, *, n_slots: int = 4, s_max: int = 512,
+                 act_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.ctx = Ctx(cfg=cfg, mode="decode", act_dtype=act_dtype)
+        self.cache = lm.init_cache(cfg, n_slots, s_max, act_dtype)
+        self.positions = np.zeros((n_slots,), np.int32)
+        self.budget = np.zeros((n_slots,), np.int32)
+        self.last_tok = np.zeros((n_slots,), np.int32)
+        self.live: List[Optional[Request]] = [None] * n_slots
+
+        def step(params, cache, tokens, positions):
+            logits, cache = lm.decode_step(cfg, params, cache, tokens,
+                                           positions, ctx=self.ctx)
+            return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
+                cache
+        self._step = jax.jit(step, donate_argnums=(1,))
+
+    # ---------------------------------------------------------------- slots
+    def _prefill_into_slot(self, slot: int, req: Request):
+        """Run the prompt through decode steps to build the slot cache.
+
+        (Token-by-token prefill keeps the engine single-program; the
+        prefill_step path exists for bulk prefill benchmarking.)
+        """
+        req.out_tokens = []
+        self.live[slot] = req
+        self.budget[slot] = req.max_new_tokens
+        pos = 0
+        for t in req.prompt:
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            toks[slot, 0] = int(t)
+            posv = self.positions.copy()
+            posv[slot] = pos
+            nxt, self.cache = self._step(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(posv))
+            pos += 1
+        self.positions[slot] = pos
+        self.last_tok[slot] = int(np.asarray(nxt)[slot])
+
+    def submit_and_run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve all requests to completion; returns rid -> generated ids."""
+        queue = list(requests)
+        done: Dict[int, List[int]] = {}
+        for slot in range(self.n_slots):
+            if queue:
+                self._prefill_into_slot(slot, queue.pop(0))
+
+        while any(r is not None for r in self.live):
+            toks = self.last_tok.reshape(-1, 1).astype(np.int32)
+            nxt, self.cache = self._step(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.positions))
+            nxt = np.asarray(nxt)
+            for slot, req in enumerate(self.live):
+                if req is None:
+                    continue
+                req.out_tokens.append(int(toks[slot, 0]))
+                self.positions[slot] += 1
+                self.budget[slot] -= 1
+                self.last_tok[slot] = int(nxt[slot])
+                if self.budget[slot] <= 0 or \
+                        self.positions[slot] >= self.s_max - 1:
+                    done[req.rid] = req.out_tokens
+                    self.live[slot] = None
+                    if queue:                    # continuous batching refill
+                        self._prefill_into_slot(slot, queue.pop(0))
+        return done

@@ -1,0 +1,2 @@
+"""Training substrate: optimizers (from scratch), ZeRO sharding,
+gradient compression, and the pjit train-step builder."""

@@ -1,0 +1,84 @@
+"""Gradient compression for the DP all-reduce (beyond-paper, §Perf).
+
+Two schemes, both with error feedback so compression error accumulates
+locally instead of biasing the update (Stich et al., memory-compensated
+SGD):
+
+  * top-k sparsification — keep the k largest-|g| entries per tensor
+    (k = ratio * numel); the residual feeds back into the next step.
+  * int8 rows — the same symmetric per-row quantizer the SL boundary
+    uses (kernels/split_quant), applied to gradients.
+
+In the paper's constellation these compress the *ISL gradient payload*
+(for the FL-hybrid extension the paper's conclusion sketches); in the
+scaled-out LM track they model all-reduce volume reduction.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any            # same pytree as grads, fp32
+
+
+def ef_init(params) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _topk_one(g, ratio: float):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return kept.reshape(g.shape)
+
+
+def topk_compress(grads, ef: ErrorFeedbackState, *, ratio: float = 0.01
+                  ) -> Tuple[Any, ErrorFeedbackState, dict]:
+    """Returns (compressed_grads, new_ef, metrics)."""
+    acc = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                       grads, ef.residual)
+    kept = jax.tree.map(lambda a: _topk_one(a, ratio), acc)
+    resid = jax.tree.map(lambda a, kk: a - kk, acc, kept)
+    kept_norm = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                             for x in jax.tree.leaves(kept)))
+    res_norm = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                            for x in jax.tree.leaves(resid)))
+    return kept, ErrorFeedbackState(resid), {
+        "compress_kept_norm": kept_norm, "compress_residual_norm": res_norm}
+
+
+def _int8_one(g):
+    x = g.astype(jnp.float32)
+    if x.ndim < 2:
+        x2 = x.reshape(1, -1)
+    else:
+        x2 = x.reshape(-1, x.shape[-1])
+    q, s = ops.quantize_boundary(x2, use_pallas=False)
+    return ops.dequantize_boundary(q, s).reshape(g.shape)
+
+
+def int8_compress(grads, ef: ErrorFeedbackState
+                  ) -> Tuple[Any, ErrorFeedbackState, dict]:
+    acc = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                       grads, ef.residual)
+    deq = jax.tree.map(_int8_one, acc)
+    resid = jax.tree.map(lambda a, d: a - d, acc, deq)
+    return deq, ErrorFeedbackState(resid), {}
+
+
+def compress(grads, ef, *, scheme: str = "none", topk_ratio: float = 0.01):
+    if scheme == "none":
+        return grads, ef, {}
+    if scheme == "topk":
+        return topk_compress(grads, ef, ratio=topk_ratio)
+    if scheme == "int8":
+        return int8_compress(grads, ef)
+    raise ValueError(scheme)

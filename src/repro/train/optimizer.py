@@ -1,0 +1,168 @@
+"""Optimizers from scratch (no optax): AdamW and SGD-momentum.
+
+Optimizer state mirrors the parameter pytree; ``zero_specs`` produces
+PartitionSpecs that additionally shard every state tensor (and the fp32
+master copy) along the ZeRO axis (rules.zero, default "data") on its
+largest replicated dimension — ZeRO-1/2 style optimizer-state sharding
+on top of whatever tensor-parallel sharding the parameter already has.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import ParamSpec, ShardingRules, is_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay (standard LM schedule)."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step, mu, nu), {"grad_norm": gn, "lr": lr}
+
+
+# --------------------------------------------------------------------------
+# SGD with momentum (used by the SL constellation driver; the paper's
+# "online learning" loop uses plain first-order updates).
+# --------------------------------------------------------------------------
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+def sgd_init(params) -> SGDState:
+    return SGDState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+
+
+def sgd_update(grads, state: SGDState, params, *, lr=1e-2, beta=0.9,
+               grad_clip=1.0):
+    grads, gn = clip_by_global_norm(grads, grad_clip)
+    mom = jax.tree.map(lambda m, g: beta * m + g, state.momentum, grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, mom)
+    return new_params, SGDState(state.step + 1, mom), {"grad_norm": gn}
+
+
+# --------------------------------------------------------------------------
+# ZeRO sharding of optimizer state.
+# --------------------------------------------------------------------------
+
+def zero_axis_for(spec: ParamSpec, rules: ShardingRules, mesh) -> P:
+    """Shard the optimizer-state copy of ``spec`` along rules.zero too.
+
+    The ZeRO axis is attached to the largest dim that the parameter
+    sharding leaves unpartitioned and that the axis divides; if none
+    qualifies the state stays like the param (replicated state for tiny
+    norms/biases is the right call — partitioning them costs more in
+    collective latency than it saves).
+    """
+    base = rules.resolve(spec.axes, mesh, spec.shape)
+    zaxis = rules.zero
+    if isinstance(zaxis, str):
+        zaxis = (zaxis,)
+    zaxis = tuple(a for a in (zaxis or ()) if a in mesh.axis_names)
+    if not zaxis:
+        return base
+    taken = set()
+    for e in base:
+        if e is None:
+            continue
+        taken.update(e if isinstance(e, tuple) else (e,))
+    if set(zaxis) & taken:
+        return base
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    extent = 1
+    for a in zaxis:
+        extent *= sizes[a]
+    order = sorted(range(len(spec.shape)), key=lambda i: -spec.shape[i])
+    for i in order:
+        if base[i] is None and spec.shape[i] % extent == 0 and spec.shape[i] >= extent:
+            parts = list(base)
+            parts[i] = zaxis[0] if len(zaxis) == 1 else zaxis
+            return P(*parts)
+    return base
+
+
+def zero_partition_specs(abstract_tree, rules: ShardingRules, mesh):
+    """PartitionSpec tree for optimizer state (mu/nu/master fp32)."""
+    return jax.tree.map(lambda s: zero_axis_for(s, rules, mesh),
+                        abstract_tree, is_leaf=is_spec)
+
+
+def adamw_state_specs(abstract_tree, rules: ShardingRules, mesh):
+    zspec = zero_partition_specs(abstract_tree, rules, mesh)
+    return AdamWState(step=P(), mu=zspec,
+                      nu=jax.tree.map(lambda x: x, zspec))

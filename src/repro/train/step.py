@@ -1,0 +1,199 @@
+"""pjit train/serve step builders for the LM track.
+
+``make_train_step`` returns (step_fn, state_shardings): a donated,
+fully-sharded AdamW step — loss+grad (remat policy), optional gradient
+compression with error feedback, global-norm clip, AdamW with
+ZeRO-sharded state. Under pjit's global-view semantics the DP gradient
+all-reduce is implicit in the partitioned matmul transposes; the mesh
+rules decide what becomes all-reduce vs reduce-scatter.
+
+``make_prefill_step`` / ``make_decode_step`` build the serving entry
+points the decode_* / long_* dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.models.param import ShardingRules, partition_specs, shape_structs
+from repro.train import compression
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                   adamw_state_specs, adamw_update)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    remat: str = "full"                  # none | dots | full
+    compression: str = "none"            # none | topk | int8
+    topk_ratio: float = 0.01
+    act_dtype: Any = jnp.bfloat16
+    aux_weight: float = 0.01
+    use_pallas: Optional[bool] = False
+    block_q: int = 512
+    block_k: int = 512
+    scan_unroll: int = 1
+    attn_compute_dtype: Any = jnp.float32
+    mamba_chunk: int = 128
+    mlstm_chunk: int = 256
+    moe_dispatch: str = "global"
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Any                              # error-feedback residuals or None
+
+
+def _batch_sharding(mesh, rules: ShardingRules, struct):
+    spec = rules.resolve(("batch",) + (None,) * (len(struct.shape) - 1),
+                         mesh, struct.shape)
+    return NamedSharding(mesh, spec)
+
+
+def make_train_step(cfg, mesh, rules: ShardingRules,
+                    tcfg: TrainConfig = TrainConfig()):
+    """Returns (train_step, state_shardings, batch_shardings_fn).
+
+    train_step(state, batch) -> (state, metrics); batch is a dict with
+    tokens/labels (+ frontend stubs). Donates state.
+    """
+    abstract = lm.abstract_params(cfg)
+    pspecs = partition_specs(abstract, rules, mesh)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    opt_specs = adamw_state_specs(abstract, rules, mesh)
+    opt_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), opt_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    ef_sh = opt_sh.mu if tcfg.compression != "none" else None
+
+    state_sh = TrainState(params=param_sh, opt=opt_sh, ef=ef_sh)
+    ctx = Ctx(cfg=cfg, mesh=mesh, rules=rules, mode="train",
+              act_dtype=tcfg.act_dtype, use_pallas=tcfg.use_pallas,
+              block_q=tcfg.block_q, block_k=tcfg.block_k,
+              attn_compute_dtype=tcfg.attn_compute_dtype,
+              mamba_chunk=tcfg.mamba_chunk, mlstm_chunk=tcfg.mlstm_chunk,
+              moe_dispatch=tcfg.moe_dispatch)
+
+    def loss_fn(params, batch):
+        return lm.loss(cfg, params, batch["tokens"], batch["labels"],
+                       ctx=ctx,
+                       frontend_embed=batch.get("frontend_embed"),
+                       enc_frames=batch.get("enc_frames"),
+                       remat=tcfg.remat, aux_weight=tcfg.aux_weight,
+                       unroll=tcfg.scan_unroll)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        (lv, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        ef = state.ef
+        if tcfg.compression != "none":
+            grads, ef_state, cm = compression.compress(
+                grads, compression.ErrorFeedbackState(ef),
+                scheme=tcfg.compression, topk_ratio=tcfg.topk_ratio)
+            ef = ef_state.residual
+            metrics.update(cm)
+        params, opt, om = adamw_update(tcfg.adamw, grads, state.opt,
+                                       state.params)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = lv
+        return TrainState(params, opt, ef), metrics
+
+    def init_state(rng) -> TrainState:
+        params = lm.init(cfg, rng)
+        ef = (compression.ef_init(params).residual
+              if tcfg.compression != "none" else None)
+        return TrainState(params, adamw_init(params), ef)
+
+    def batch_shardings(input_structs: Dict) -> Dict:
+        return {k: _batch_sharding(mesh, rules, v)
+                for k, v in input_structs.items()}
+
+    jitted = jax.jit(train_step,
+                     in_shardings=(state_sh, None),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+    return jitted, state_sh, batch_shardings, init_state
+
+
+# --------------------------------------------------------------------------
+# Serving steps (the decode/prefill dry-run cells).
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg, mesh, rules: ShardingRules,
+                      act_dtype=jnp.bfloat16, use_pallas=False,
+                      block_q: int = 512, block_k: int = 512,
+                      unroll: int = 1):
+    """prefill_step(params, batch) -> (logits_last, cache)."""
+    ctx = Ctx(cfg=cfg, mesh=mesh, rules=rules, mode="prefill",
+              act_dtype=act_dtype, use_pallas=use_pallas,
+              block_q=block_q, block_k=block_k)
+    abstract = lm.abstract_params(cfg)
+    pspecs = partition_specs(abstract, rules, mesh)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    def prefill_step(params, batch):
+        logits, _, cache = lm.forward(
+            cfg, params, batch["tokens"], ctx=ctx,
+            frontend_embed=batch.get("frontend_embed"),
+            enc_frames=batch.get("enc_frames"), remat="none",
+            unroll=unroll)
+        return logits[:, -1:], cache
+
+    return jax.jit(prefill_step, in_shardings=(param_sh, None)), param_sh
+
+
+def cache_shardings(cfg, cache, mesh, rules: ShardingRules):
+    """Shard caches: batch over data axes, kv-heads/channels over model."""
+    def spec_for(path_leaf):
+        shp = path_leaf.shape
+        if len(shp) == 5:        # (U, B, KV, S, dh) attention cache
+            return rules.resolve(("layers", "batch", "kv_heads", None, None),
+                                 mesh, shp)
+        if len(shp) == 4:        # (U, B, H, P) / (U, B, 3, di) style
+            return rules.resolve(("layers", "batch", None, "inner"),
+                                 mesh, shp)
+        if len(shp) == 5 + 0:
+            pass
+        return rules.resolve(("layers", "batch") + (None,) * (len(shp) - 2),
+                             mesh, shp)
+
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, spec_for(a)), cache)
+
+
+def make_decode_step(cfg, mesh, rules: ShardingRules,
+                     batch: int, s_max: int, act_dtype=jnp.bfloat16,
+                     use_pallas=False, unroll: int = 1):
+    """serve_step(params, cache, tokens, positions) -> (logits, cache).
+
+    Cache is donated (in-place KV update — the production decode loop).
+    """
+    ctx = Ctx(cfg=cfg, mesh=mesh, rules=rules, mode="decode",
+              act_dtype=act_dtype, use_pallas=use_pallas)
+    abstract = lm.abstract_params(cfg)
+    pspecs = partition_specs(abstract, rules, mesh)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    cache_struct = jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, s_max, act_dtype))
+    cache_sh = cache_shardings(cfg, cache_struct, mesh, rules)
+
+    def serve_step(params, cache, tokens, positions):
+        return lm.decode_step(cfg, params, cache, tokens, positions, ctx=ctx,
+                              unroll=unroll)
+
+    tok_sh = NamedSharding(mesh, rules.resolve(("batch", None), mesh,
+                                               (batch, 1)))
+    pos_sh = NamedSharding(mesh, rules.resolve(("batch",), mesh, (batch,)))
+    jitted = jax.jit(serve_step,
+                     in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,))
+    return jitted, param_sh, cache_sh, cache_struct

@@ -1,0 +1,6 @@
+from repro.utils.treeutil import (
+    tree_bytes,
+    tree_count_params,
+    tree_flatten_with_names,
+    tree_global_norm,
+)

@@ -1,0 +1,121 @@
+"""HLO inspection: collective-traffic accounting from the compiled
+(post-SPMD, per-device) module text.
+
+``collective_bytes(compiled.as_text())`` sums the bytes each device
+moves through all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops. Conventions per op (bytes that actually cross
+links, per device, ring-algorithm steady state ~ payload size):
+
+  all-reduce        operand bytes (2(N-1)/N ~ 2x payload; we report 1x
+                    payload and fold algorithm factors into link_bw)
+  all-gather        result bytes  (what the device must receive)
+  reduce-scatter    operand bytes (what the device must send)
+  all-to-all        operand bytes
+  collective-permute operand bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ops where the *result* is the received payload
+_USE_RESULT = {"all-gather"}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_instr(line: str, op: str) -> Tuple[str, str]:
+    """Return (result_text, operand_text) for '%x = <res> op(<args>)'."""
+    key = f" {op}("
+    pos = line.find(key)
+    if pos < 0:
+        key = f"= {op}("
+        pos = line.find(key)
+        if pos < 0:
+            return "", ""
+        res_text = ""
+    else:
+        eq = line.find(" = ")
+        res_text = line[eq + 3: pos] if eq >= 0 else ""
+    start = line.find("(", pos)
+    depth = 0
+    end = start
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return res_text, line[start + 1: end]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind {count, bytes} from a (post-SPMD) HLO module text."""
+    stats: Dict[str, Dict[str, float]] = {
+        op: {"count": 0, "bytes": 0.0} for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        for op in _COLLECTIVES:
+            # match the op as an instruction, not a metadata mention
+            if f" {op}(" in s or f"= {op}(" in s:
+                if f"{op}-start" in s and op + "-start(" not in s:
+                    pass
+                res_text, arg_text = _split_instr(s, op)
+                if not arg_text and not res_text:
+                    continue
+                payload = _shapes_bytes(
+                    res_text if op in _USE_RESULT else arg_text)
+                # async pairs (-start/-done) would double count; the
+                # "= op(" match only hits the sync or -start form once.
+                stats[op]["count"] += 1
+                stats[op]["bytes"] += payload
+                break
+        else:
+            # async forms: all-gather-start etc.
+            for op in _COLLECTIVES:
+                if f" {op}-start(" in s or f"= {op}-start(" in s:
+                    res_text, arg_text = _split_instr(s, f"{op}-start")
+                    payload = _shapes_bytes(
+                        res_text if op in _USE_RESULT else arg_text)
+                    stats[op]["count"] += 1
+                    stats[op]["bytes"] += payload
+                    break
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"=\s+(?:\([^)]*\)\s+)?{re.escape(opname)}\(",
+                          hlo_text))

@@ -1,0 +1,55 @@
+"""Pytree helpers used across the framework (no flax/optax available)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_flatten_with_names(tree, prefix: str = ""):
+    """Yield (dotted_name, leaf) pairs for a nested dict/list pytree."""
+    out = []
+
+    def _walk(node, path):
+        if node is None:                      # empty subtree (jax semantics)
+            return
+        if isinstance(node, dict):
+            for k in sorted(node.keys()):
+                _walk(node[k], f"{path}.{k}" if path else str(k))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                _walk(v, f"{path}[{i}]")
+        else:
+            out.append((path, node))
+
+    _walk(tree, prefix)
+    return out
+
+
+def tree_count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def tree_bytes(tree) -> int:
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)

@@ -1,0 +1,78 @@
+"""Checkpointing: atomicity, integrity, restart discovery."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "b": {"c": jnp.arange(6, dtype=jnp.int32),
+                  "d": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t, meta={"step": 7})
+    out, meta = ckpt.restore(str(tmp_path), 7, t)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_discovery(tmp_path):
+    assert ckpt.latest_step(str(tmp_path)) is None
+    for s in (1, 5, 3):
+        ckpt.save(str(tmp_path), s, _tree(s))
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_integrity_failure_detected(tmp_path):
+    t = _tree()
+    path = ckpt.save(str(tmp_path), 1, t)
+    # corrupt the array file
+    arr = os.path.join(path, "arrays.npz")
+    data = bytearray(open(arr, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(arr, "wb").write(bytes(data))
+    with pytest.raises(Exception):
+        ckpt.restore(str(tmp_path), 1, t)
+
+
+def test_shape_mismatch_detected(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    wrong = {"a": jnp.zeros((3, 8)), "b": {"c": jnp.zeros(6, jnp.int32),
+                                           "d": jnp.float32(0)}}
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), 1, wrong)
+
+
+def test_no_silent_overwrite(tmp_path):
+    t = _tree(1)
+    ckpt.save(str(tmp_path), 1, t)
+    ckpt.save(str(tmp_path), 1, _tree(2))     # must keep the original
+    out, _ = ckpt.restore(str(tmp_path), 1, t)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(t["a"]))
+
+
+def test_no_tmp_litter(tmp_path):
+    ckpt.save(str(tmp_path), 3, _tree())
+    entries = [e for e in os.listdir(tmp_path) if e.startswith(".tmp")]
+    assert entries == []
+
+
+def test_none_leaves_skipped(tmp_path):
+    """TrainState.ef is None when compression is off; checkpoints must
+    treat None as an empty subtree (jax semantics), not an object array."""
+    t = {"a": jnp.arange(3.0), "ef": None, "nested": {"x": None,
+                                                      "y": jnp.ones(2)}}
+    ckpt.save(str(tmp_path), 1, t)
+    out, _ = ckpt.restore(str(tmp_path), 1, t)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(3.0))
+    assert out["ef"] is None
+    assert out["nested"]["x"] is None

@@ -1,0 +1,87 @@
+"""Constellation scheduler: training progress, faults, skips, handoffs,
+shedding, elastic membership."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.constellation import ConstellationConfig, ConstellationSim
+from repro.core.energy import PassBudget
+from repro.core.sl_step import autoencoder_adapter
+from repro.data.synthetic import ImageryShards
+
+SHARDS = ImageryShards(img=32, batch=4)
+
+
+def _data(s, i):
+    return jax.tree.map(jnp.asarray, SHARDS.batch_at(s, i))
+
+
+def _sim(**kw):
+    ad = autoencoder_adapter(cut=5, img=32)
+    cfg = ConstellationConfig(batch_size=4, **kw)
+    return ConstellationSim(ad, PassBudget(n_items=16), _data, cfg)
+
+
+def test_online_learning_progress():
+    sim = _sim(n_passes=10)
+    recs = sim.run()
+    s = sim.summary()
+    assert s["trained"] == 10
+    assert s["loss_last"] < s["loss_first"]
+    # energy accounted every trained pass
+    assert all(r.e_total_j > 0 for r in recs)
+
+
+def test_energy_skip_policy():
+    # battery below reserve and negligible recharge => skips
+    sim = _sim(n_passes=6, battery_j=10.0, recharge_w=0.0, reserve_j=50.0)
+    recs = sim.run()
+    assert all(r.action == "skipped_energy" for r in recs)
+    # the segment still moves around the ring (handoff bits recorded)
+    assert all(r.d_isl_bits > 0 for r in recs)
+
+
+def test_failures_dont_stop_the_ring(tmp_path):
+    sim = _sim(n_passes=15, fail_prob=0.3, handoff_dir=str(tmp_path),
+               seed=3)
+    recs = sim.run()
+    s = sim.summary()
+    assert s["failed"] > 0
+    assert s["trained"] > 0
+    assert len(recs) == 15
+
+
+def test_handoff_checkpoint_roundtrip(tmp_path):
+    from repro import ckpt
+    sim = _sim(n_passes=3, handoff_dir=str(tmp_path))
+    sim.run()
+    restored, meta, idx = ckpt.restore_handoff(str(tmp_path), sim.params_a)
+    assert idx == 2
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(sim.params_a)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert meta["payload_bytes"] > 0
+
+
+def test_elastic_membership():
+    sim = _sim(n_passes=8, join_events={2: 3}, leave_events={4: 0})
+    sim.run()
+    assert len(sim.sats) == 25 + 3
+    assert not sim.sats[0].alive
+    # ring keeps serving after leave
+    assert sim.summary()["trained"] == 8
+
+
+def test_straggler_shedding_activates():
+    """Give each pass far more items than the compute budget allows:
+    the optimizer sheds to the feasible fraction instead of failing."""
+    ad = autoencoder_adapter(cut=5, img=32)
+    # inflate per-item work via the measured-costs path: huge n_items
+    budget = PassBudget(n_items=4e8)
+    sim = ConstellationSim(ad, budget, _data,
+                           ConstellationConfig(n_passes=1, batch_size=4))
+    recs = sim.run()
+    assert recs[0].action == "shed"
+    assert recs[0].kept_fraction < 1.0

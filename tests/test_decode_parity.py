@@ -1,0 +1,104 @@
+"""Serving correctness: token-by-token decode against the KV cache must
+reproduce the full-sequence forward logits (per architecture family),
+and prefill->decode must agree with decode-from-scratch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.models.layers import Ctx
+
+PARITY_ARCHS = ["granite_3_2b", "llama3_8b", "mixtral_8x7b", "xlstm_1_3b",
+                "zamba2_1_2b", "qwen2_vl_7b", "phi35_moe"]
+
+
+def _decode_all(cfg, params, tokens, s_max, ctx):
+    B, S = tokens.shape
+    cache = lm.init_cache(cfg, B, s_max, jnp.float32)
+    outs = []
+    for t in range(S):
+        logits, cache = lm.decode_step(
+            cfg, params, cache, tokens[:, t:t + 1],
+            jnp.full((B,), t, jnp.int32), ctx=ctx)
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1), cache
+
+
+@pytest.mark.parametrize("name", PARITY_ARCHS)
+def test_decode_matches_forward(name):
+    cfg = configs.get_smoke(name)
+    if cfg.window is not None:
+        cfg = dataclasses.replace(cfg, window=8)
+    if cfg.n_experts:
+        # capacity dropping is order-dependent by design (GShard); use
+        # ample capacity so the parity check is exact
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    params = lm.init(cfg, jax.random.key(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    ctx = Ctx(cfg=cfg, act_dtype=jnp.float32)
+
+    full, _, _ = lm.forward(cfg, params, tokens, ctx=ctx)
+    dctx = dataclasses.replace(ctx, mode="decode")
+    dec, _ = _decode_all(cfg, params, tokens, s_max=S + 4, ctx=dctx)
+    np.testing.assert_allclose(dec, full, atol=2e-3, rtol=2e-3)
+
+
+def test_swa_ring_cache_matches_forward_beyond_window():
+    """Sequence longer than the SWA window: the ring buffer must agree
+    with the full windowed forward."""
+    cfg = dataclasses.replace(configs.get_smoke("mixtral_8x7b"), window=6,
+                              capacity_factor=16.0)
+    params = lm.init(cfg, jax.random.key(0))
+    B, S = 1, 15
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    ctx = Ctx(cfg=cfg, act_dtype=jnp.float32)
+    full, _, _ = lm.forward(cfg, params, tokens, ctx=ctx)
+    dctx = dataclasses.replace(ctx, mode="decode")
+    dec, _ = _decode_all(cfg, params, tokens, s_max=64, ctx=dctx)
+    np.testing.assert_allclose(dec, full, atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("name", ["granite_3_2b", "zamba2_1_2b",
+                                  "whisper_small", "mixtral_8x7b"])
+def test_prefill_then_decode(name):
+    """prefill(0..T0) -> cache_from_prefill -> decode(T0..S) must equal
+    the full forward on the suffix."""
+    cfg = configs.get_smoke(name)
+    if cfg.window is not None:
+        cfg = dataclasses.replace(cfg, window=8)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    params = lm.init(cfg, jax.random.key(0))
+    B, S, T0 = 2, 14, 9
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    kw = {}
+    if cfg.frontend == "audio":
+        kw["enc_frames"] = 0.01 * jnp.ones(
+            (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+    ctx = Ctx(cfg=cfg, act_dtype=jnp.float32)
+
+    full, _, _ = lm.forward(cfg, params, tokens, ctx=ctx, **kw)
+
+    pctx = dataclasses.replace(ctx, mode="prefill")
+    _, _, caches = lm.forward(cfg, params, tokens[:, :T0], ctx=pctx, **kw)
+    s_max = S + 4
+    cache = lm.cache_from_prefill(cfg, caches, s_max, jnp.float32)
+    dctx = dataclasses.replace(ctx, mode="decode")
+    for t in range(T0, S):
+        logits, cache = lm.decode_step(
+            cfg, params, cache, tokens[:, t:t + 1],
+            jnp.full((B,), t, jnp.int32), ctx=dctx)
+        np.testing.assert_allclose(logits[:, 0], full[:, t],
+                                   atol=2e-3, rtol=2e-3, err_msg=f"t={t}")
+
+
+def test_long_context_cells_use_subquadratic_archs_only():
+    from repro.configs.shapes import SHAPES, applicable
+    long = SHAPES["long_500k"]
+    ok = {a for a in configs.ASSIGNED if applicable(configs.get(a), long)}
+    assert ok == {"xlstm_1_3b", "zamba2_1_2b", "mixtral_8x7b"}

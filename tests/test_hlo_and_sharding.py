@@ -1,0 +1,95 @@
+"""HLO collective parser + logical-axis sharding resolution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import ParamSpec, ShardingRules
+from repro.utils import hlo
+
+SAMPLE = """
+HloModule test
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %p0), replica_groups={}
+  %ag = f32[256,256]{1,0} all-gather(f32[128,256]{1,0} %ar), dimensions={0}
+  %rs = f32[64,256]{1,0} reduce-scatter(f32[128,256]{1,0} %p0), dimensions={0}
+  %cp = f32[128,256]{1,0} collective-permute(f32[128,256]{1,0} %p0), source_target_pairs={{0,1}}
+  %a2a = f32[128,256]{1,0} all-to-all(f32[128,256]{1,0} %p0), dimensions={0}
+  ROOT %out = f32[128,256]{1,0} add(f32[128,256]{1,0} %ar, f32[128,256]{1,0} %cp)
+}
+"""
+
+
+def test_collective_census_counts_and_bytes():
+    stats = hlo.collective_stats(SAMPLE)
+    b = 128 * 256 * 4
+    assert stats["all-reduce"] == {"count": 1, "bytes": b}
+    assert stats["all-gather"] == {"count": 1, "bytes": 2 * b}   # result
+    assert stats["reduce-scatter"] == {"count": 1, "bytes": b}   # operand
+    assert stats["collective-permute"]["count"] == 1
+    assert stats["all-to-all"]["count"] == 1
+    assert hlo.collective_bytes(SAMPLE) == pytest.approx(6 * b)
+
+
+def test_async_start_counted_once():
+    text = """
+  %ags = (f32[16,4]{1,0}, f32[32,4]{1,0}) all-gather-start(f32[16,4]{1,0} %x), dimensions={0}
+  %agd = f32[32,4]{1,0} all-gather-done((f32[16,4], f32[32,4]) %ags)
+"""
+    stats = hlo.collective_stats(text)
+    assert stats["all-gather"]["count"] == 1
+
+
+def test_real_compiled_collectives_on_host_mesh():
+    """A 1-device mesh compiles with zero collectives; the parser must
+    return zeros (no false positives on fusion metadata)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh:
+        f = jax.jit(lambda x: (x @ x.T).sum())
+        txt = f.lower(jnp.ones((8, 8))).compile().as_text()
+    assert hlo.collective_bytes(txt) == 0
+
+
+# ----------------------------------------------------------------- sharding
+
+class _FakeMesh:
+    def __init__(self, shape, names):
+        import numpy as _np
+        self.devices = _np.empty(shape)
+        self.axis_names = names
+
+
+def test_rules_resolve_basic():
+    rules = ShardingRules()
+    mesh = _FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    spec = rules.resolve(("batch", None, "mlp"), mesh, (256, 4096, 8192))
+    assert spec == P(("pod", "data"), None, "model")
+
+
+def test_rules_drop_indivisible():
+    rules = ShardingRules()
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    # 15 heads don't divide the 16-way model axis -> replicated
+    spec = rules.resolve(("batch", None, "heads", None), mesh,
+                         (256, 4096, 15, 64))
+    assert spec == P("data", None, None, None)
+    # granite's 49155-row vocab stays replicated too
+    spec = rules.resolve(("vocab", "embed"), mesh, (49155, 2048))
+    assert spec == P(None, None)
+
+
+def test_rules_single_pod_drops_pod_axis():
+    rules = ShardingRules()
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    spec = rules.resolve(("batch",), mesh, (256,))
+    assert spec == P("data")
+
+
+def test_no_double_axis_use():
+    rules = ShardingRules(seq="model")
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    # heads wants model, seq wants model: first come first served
+    spec = rules.resolve(("batch", "seq", "heads"), mesh, (256, 4096, 32))
+    assert spec == P("data", "model", None)

@@ -1,0 +1,63 @@
+"""Paper eqs. (1)-(5): orbital geometry."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.orbits import (C_LIGHT, OrbitalPlane, PAPER_PLANE, R_EARTH_M)
+
+
+def test_table1_pass_duration_matches_paper():
+    # paper: "T_pass ≈ 3.8 minutes" for Table I (h=550km, eps_min=30°)
+    assert PAPER_PLANE.pass_duration_s / 60 == pytest.approx(3.8, abs=0.05)
+
+
+def test_period_eq1():
+    # ISS-like orbit sanity: 550 km -> ~95.5 min period
+    assert PAPER_PLANE.period_s / 60 == pytest.approx(95.5, abs=0.2)
+
+
+def test_slant_range_eq2_bounds():
+    p = PAPER_PLANE
+    # at zenith the slant range is exactly the altitude
+    assert p.slant_range_m(math.pi / 2) == pytest.approx(p.altitude_m, rel=1e-9)
+    # at min elevation it is the max distance
+    assert p.max_slant_range_m > p.altitude_m
+
+
+def test_isl_distance_eq5():
+    p = PAPER_PLANE
+    expected = 2 * (R_EARTH_M + p.altitude_m) * math.sin(math.pi / p.n_sats)
+    assert p.isl_distance_m == pytest.approx(expected)
+    # 25 sats at 550 km: ~1735 km (paper geometry)
+    assert p.isl_distance_m / 1e3 == pytest.approx(1734.9, abs=1.0)
+
+
+def test_mean_distance_between_min_and_max():
+    p = PAPER_PLANE
+    d = p.mean_slant_range_m()
+    assert p.altitude_m < d < p.max_slant_range_m
+
+
+def test_prop_delay():
+    p = PAPER_PLANE
+    assert p.mean_prop_delay_s == pytest.approx(
+        p.mean_slant_range_m() / C_LIGHT)
+
+
+@given(h_km=st.floats(300, 2000), eps_deg=st.floats(5, 80),
+       n=st.integers(4, 200))
+@settings(max_examples=50, deadline=None)
+def test_geometry_invariants(h_km, eps_deg, n):
+    p = OrbitalPlane(n_sats=n, altitude_m=h_km * 1e3,
+                     min_elevation_rad=math.radians(eps_deg))
+    assert p.period_s > 0
+    assert 0 < p.pass_central_angle_rad < math.pi
+    assert 0 < p.pass_duration_s < p.period_s
+    # higher min elevation => shorter pass
+    p2 = OrbitalPlane(n_sats=n, altitude_m=h_km * 1e3,
+                      min_elevation_rad=math.radians(min(eps_deg + 5, 85)))
+    assert p2.pass_duration_s <= p.pass_duration_s + 1e-9
+    # more satellites => shorter ISL
+    p3 = OrbitalPlane(n_sats=n + 1, altitude_m=h_km * 1e3)
+    assert p3.isl_distance_m < p.isl_distance_m

@@ -1,0 +1,148 @@
+"""Problem (13): exact solver vs scipy, KKT, shedding, pipelining."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.energy import (PassBudget, SplitCosts, direct_download_costs,
+                               evaluate_raw)
+from repro.core.resource_opt import (_build_phases, best_split, solve,
+                                     solve_pipelined, solve_with_shedding)
+
+BUDGET = PassBudget()
+
+
+def _scipy_solve(budget, costs):
+    from scipy.optimize import minimize
+    phases = [p for p in _build_phases(budget, costs) if p is not None]
+    T = budget.time_budget_s(costs)
+    x0 = np.array([T / len(phases)] * len(phases))
+    res = minimize(
+        lambda x: sum(p.energy(t) for p, t in zip(phases, x)), x0,
+        bounds=[(p.t_min, None) for p in phases],
+        constraints=[{"type": "ineq", "fun": lambda x: T - x.sum()}],
+        method="SLSQP", options={"maxiter": 800, "ftol": 1e-16})
+    return res.fun
+
+
+COSTS = st.builds(
+    SplitCosts,
+    w1_flops=st.floats(0, 5e12),
+    w2_flops=st.floats(1e6, 5e12),
+    dtx_bits=st.floats(1e2, 5e9),
+    d_isl_bits=st.floats(0, 1e9),
+)
+
+
+@given(costs=COSTS)
+@settings(max_examples=30, deadline=None)
+def test_solver_matches_scipy(costs):
+    rep = solve(BUDGET, costs)
+    if not rep.allocation.feasible:
+        return
+    e_scipy = _scipy_solve(BUDGET, costs)
+    # compare the variable part only (E_ISL is a constant outside (13));
+    # our dual bisection may be *better* than SLSQP, never worse.
+    e_var = rep.allocation.e_total - rep.allocation.e_isl
+    assert e_var <= e_scipy * (1 + 1e-4) + 1e-12
+    assert e_var >= e_scipy * (1 - 1e-2) - 1e-12
+
+
+@given(costs=COSTS)
+@settings(max_examples=50, deadline=None)
+def test_kkt_and_deadline(costs):
+    rep = solve(BUDGET, costs)
+    if not rep.allocation.feasible:
+        return
+    # deadline binds (energy decreasing in every t)
+    assert rep.allocation.t_total == pytest.approx(
+        BUDGET.plane.pass_duration_s, rel=1e-6)
+    # equalized marginals among interior phases
+    assert rep.kkt_residual < 1e-6
+
+
+@given(costs=COSTS)
+@settings(max_examples=30, deadline=None)
+def test_solution_consistent_with_raw_eval(costs):
+    """Time-domain solution, re-evaluated through the paper's raw (f, p)
+    formulation (eqs. 6-9), must give the same energy/time."""
+    rep = solve(BUDGET, costs)
+    a = rep.allocation
+    if not a.feasible:
+        return
+    raw = evaluate_raw(BUDGET, costs, a.f_sat_hz, a.f_gs_hz,
+                       a.p_down_w, a.p_up_w)
+    assert raw.e_total == pytest.approx(a.e_total, rel=1e-6)
+    assert raw.t_total == pytest.approx(a.t_total, rel=1e-6)
+
+
+def test_box_constraints_respected():
+    costs = SplitCosts(w1_flops=1e13, w2_flops=1e13, dtx_bits=1e9,
+                       d_isl_bits=1e8)
+    rep = solve(BUDGET, costs)
+    a = rep.allocation
+    if a.feasible:
+        assert a.f_sat_hz <= BUDGET.sat_device.f_max_hz * (1 + 1e-9)
+        assert a.f_gs_hz <= BUDGET.gs_device.f_max_hz * (1 + 1e-9)
+        assert a.p_down_w <= BUDGET.link.max_tx_power_w * (1 + 1e-9)
+        assert a.p_up_w <= BUDGET.link.max_tx_power_w * (1 + 1e-9)
+
+
+def test_infeasible_detected_and_shed():
+    # 1000x the max processable work in a pass
+    w_max = BUDGET.sat_device.peak_flops * BUDGET.plane.pass_duration_s \
+        / BUDGET.n_items
+    costs = SplitCosts(w1_flops=w_max * 1000, w2_flops=1e6,
+                       dtx_bits=1e3, d_isl_bits=0)
+    rep = solve(BUDGET, costs)
+    assert not rep.allocation.feasible
+    # 1000x over budget: even the 5% floor is infeasible -> floor returned
+    shed = solve_with_shedding(BUDGET, costs)
+    assert shed.kept_fraction == pytest.approx(0.05)
+    assert not shed.report.allocation.feasible
+    # 2x over budget: sheds to just under half and becomes feasible
+    costs2 = SplitCosts(w1_flops=w_max * 2, w2_flops=1e6,
+                        dtx_bits=1e3, d_isl_bits=0)
+    shed2 = solve_with_shedding(BUDGET, costs2)
+    assert 0.3 < shed2.kept_fraction < 0.51
+    assert shed2.report.allocation.feasible
+
+
+def test_shedding_noop_when_feasible():
+    costs = SplitCosts(w1_flops=1e9, w2_flops=1e9, dtx_bits=1e4,
+                       d_isl_bits=1e6)
+    shed = solve_with_shedding(BUDGET, costs)
+    assert shed.kept_fraction == 1.0
+
+
+def test_pipelined_never_worse():
+    costs = SplitCosts(w1_flops=3e11, w2_flops=1e11, dtx_bits=1e6,
+                       d_isl_bits=1e8)
+    seq = solve(BUDGET, costs)
+    pipe = solve_pipelined(BUDGET, costs, n_microbatches=8)
+    assert pipe.allocation.e_total <= seq.allocation.e_total * (1 + 1e-9)
+
+
+def test_best_split_picks_minimum():
+    from repro.core.splitting import resnet18_plan
+    plan = resnet18_plan()
+    cands = plan.enumerate_cuts()
+    c, rep = best_split(BUDGET, cands)
+    for other in cands:
+        r = solve(BUDGET, other)
+        if r.allocation.feasible:
+            assert rep.allocation.e_total <= r.allocation.e_total * (1 + 1e-9)
+
+
+def test_quasiconvexity_along_boundary_scaling():
+    """Energy is monotone in payload size and in work (sanity of (13))."""
+    base = SplitCosts(w1_flops=1e11, w2_flops=1e11, dtx_bits=1e6,
+                      d_isl_bits=1e7)
+    e_prev = 0.0
+    for scale in [0.5, 1.0, 2.0, 4.0]:
+        c = dataclasses.replace(base, dtx_bits=base.dtx_bits * scale)
+        e = solve(BUDGET, c).allocation.e_total
+        assert e >= e_prev - 1e-12
+        e_prev = e

@@ -1,0 +1,52 @@
+"""Serving engine: continuous batching, greedy parity with forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.serve.engine import DecodeEngine, Request
+
+
+def test_engine_serves_all_requests():
+    cfg = configs.get_smoke("granite_3_2b")
+    params = lm.init(cfg, jax.random.key(0))
+    eng = DecodeEngine(cfg, params, n_slots=2, s_max=48,
+                       act_dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 5)
+                    .astype(np.int32), max_new_tokens=6) for i in range(5)]
+    out = eng.submit_and_run(reqs)
+    assert set(out) == {0, 1, 2, 3, 4}          # continuous batching refilled
+    assert all(len(v) == 6 for v in out.values())
+
+
+def test_engine_greedy_matches_forward_argmax():
+    """Single-slot generation must equal greedy decoding computed by
+    repeatedly running the full forward (the O(S^2) oracle)."""
+    cfg = configs.get_smoke("granite_3_2b")
+    params = lm.init(cfg, jax.random.key(0))
+    prompt = np.array([3, 7, 11, 2], np.int32)
+    new = 5
+
+    # oracle: greedy via full forward
+    ctx = Ctx(cfg=cfg, act_dtype=jnp.float32)
+    seq = list(prompt)
+    oracle = []
+    for _ in range(new):
+        logits, _, _ = lm.forward(cfg, params,
+                                  jnp.asarray([seq], jnp.int32), ctx=ctx)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        oracle.append(nxt)
+        seq.append(nxt)
+
+    eng = DecodeEngine(cfg, params, n_slots=1, s_max=32,
+                       act_dtype=jnp.float32)
+    out = eng.submit_and_run([Request(rid=0, prompt=prompt,
+                                      max_new_tokens=new)])
+    # engine records the token *consumed* at each step: first entry is
+    # the model's continuation of the prompt, etc.
+    assert out[0] == oracle

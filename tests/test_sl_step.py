@@ -1,0 +1,78 @@
+"""Split-learning step: exactness vs monolithic training + payloads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.sl_step import (autoencoder_adapter, lm_adapter, make_sl_step,
+                                resnet18_adapter)
+from repro.data.synthetic import ImageryShards, TokenShards
+
+
+def _flat_err(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return max(float(jnp.max(jnp.abs(x - y)))
+               / (float(jnp.max(jnp.abs(y))) + 1e-8)
+               for x, y in zip(la, lb))
+
+
+def test_ae_split_grads_equal_monolithic():
+    from repro.models import vision
+    ad = autoencoder_adapter(cut=5, img=32)
+    pa, pb = ad.init(jax.random.key(0))
+    batch = jax.tree.map(jnp.asarray, ImageryShards(img=32, batch=4)
+                         .batch_at(0, 0))
+    res = make_sl_step(ad)(pa, pb, batch)
+    g_full = jax.grad(vision.ae_loss)({**pa, **pb}, batch["images"])
+    ga_ref = {k: g_full[k] for k in pa}
+    gb_ref = {k: g_full[k] for k in pb}
+    assert _flat_err(res.grads_a, ga_ref) < 1e-5
+    assert _flat_err(res.grads_b, gb_ref) < 1e-5
+
+
+@pytest.mark.parametrize("cut", [3, 5, 7])
+def test_resnet_split_grads_equal_monolithic(cut):
+    from repro.models import vision
+    ad = resnet18_adapter(cut=cut, img=32, n_classes=10)
+    pa, pb = ad.init(jax.random.key(1))
+    batch = jax.tree.map(jnp.asarray, ImageryShards(img=32, batch=4)
+                         .batch_at(1, 0))
+    res = make_sl_step(ad)(pa, pb, batch)
+    g_full = jax.grad(vision.resnet18_loss)({**pa, **pb}, batch["images"],
+                                            batch["labels"])
+    assert _flat_err(res.grads_a, {k: g_full[k] for k in pa}) < 1e-5
+    assert _flat_err(res.grads_b, {k: g_full[k] for k in pb}) < 1e-5
+
+
+def test_lm_split_runs_and_boundary_size():
+    cfg = configs.get_smoke("smollm_360m")
+    ad = lm_adapter(cfg, cut_units=1, seq_len=16)
+    pa, pb = ad.init(jax.random.key(0))
+    shards = TokenShards(vocab=cfg.vocab, seq_len=16, batch=2)
+    batch = jax.tree.map(jnp.asarray, shards.batch_at(0, 0))
+    res = make_sl_step(ad)(pa, pb, batch)
+    assert np.isfinite(float(res.loss))
+    # boundary = B * S * d_model * 32 bits
+    assert res.dtx_bits_down == 2 * 16 * cfg.d_model * 32
+
+
+def test_quantized_boundary_is_4x_smaller_and_close():
+    ad = autoencoder_adapter(cut=5, img=32)
+    pa, pb = ad.init(jax.random.key(0))
+    batch = jax.tree.map(jnp.asarray, ImageryShards(img=32, batch=4)
+                         .batch_at(0, 0))
+    res = make_sl_step(ad)(pa, pb, batch)
+    resq = make_sl_step(ad, quantize_boundary=True)(pa, pb, batch)
+    assert res.dtx_bits_down == 4 * resq.dtx_bits_down
+    # int8 boundary shouldn't change the loss much at init
+    assert abs(float(res.loss) - float(resq.loss)) < 0.05 * abs(
+        float(res.loss)) + 1e-3
+
+
+def test_split_costs_consistent_with_plan():
+    ad = resnet18_adapter(cut=5, img=224, n_classes=1000)
+    c = ad.costs()
+    # Table II l2 W1: 3.006 GMACs * 2 FLOPs (our convention counts 2/MAC)
+    assert c.w1_flops / 2 == pytest.approx(3.006e9, rel=0.08)
+    assert c.dtx_bits == pytest.approx(3.211e6, rel=0.01)

@@ -1,0 +1,134 @@
+"""Training substrate integration: pjit train step, optimizer, ZeRO
+specs, gradient compression, data pipeline determinism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.data.synthetic import ImageryShards, TokenShards, prefetch
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.models.param import ShardingRules, partition_specs
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   lr_at, sgd_init, sgd_update)
+from repro.train.step import TrainConfig, make_train_step
+
+
+def _loss_drops(compression="none", steps=8, topk_ratio=0.1):
+    cfg = configs.get_smoke("smollm_360m")
+    mesh = make_host_mesh()
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=1e-2, warmup_steps=2,
+                                         total_steps=steps),
+                       compression=compression, remat="none",
+                       topk_ratio=topk_ratio,
+                       act_dtype=jnp.float32)
+    step, _, _, init_state = make_train_step(cfg, mesh, ShardingRules(), tcfg)
+    shards = TokenShards(vocab=cfg.vocab, seq_len=32, batch=4)
+    with mesh:
+        state = init_state(jax.random.key(0))
+        losses = []
+        # one fixed batch: loss must drop when memorizing
+        batch = jax.tree.map(jnp.asarray, shards.batch_at(0, 0))
+        for i in range(steps):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+    return losses
+
+
+def test_train_step_loss_decreases():
+    losses = _loss_drops()
+    assert losses[-1] < losses[0] - 0.3
+
+
+@pytest.mark.parametrize("scheme", ["topk", "int8"])
+def test_compressed_training_still_learns(scheme):
+    losses = _loss_drops(compression=scheme, steps=12)
+    assert losses[-1] < losses[0] - 0.05
+
+
+def test_adamw_beats_reference_quadratic():
+    """AdamW on a quadratic reaches the optimum; bias correction kicks in
+    on step 1 (no cold-start shrinkage)."""
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=1000, min_lr_frac=1.0, grad_clip=1e9)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(300):
+        g = {"w": 2.0 * params["w"]}
+        params, state, _ = adamw_update(cfg, g, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+    assert float(lr_at(cfg, jnp.asarray(55))) < 1.0
+
+
+def test_grad_clip_applies():
+    cfg = AdamWConfig(grad_clip=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    _, _, m = adamw_update(cfg, {"w": jnp.full(3, 100.0)}, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(np.sqrt(3) * 100, rel=1e-5)
+
+
+def test_zero_specs_shard_optimizer_state():
+    from repro.train.optimizer import adamw_state_specs
+    import os
+    cfg = configs.get_smoke("llama3_8b")
+    # a fake 4-device mesh via reshaped host devices isn't available on
+    # 1 CPU; use a (1,1) mesh and check spec STRUCTURE instead
+    mesh = make_host_mesh()
+    specs = adamw_state_specs(lm.abstract_params(cfg), ShardingRules(), mesh)
+    leaves = jax.tree.leaves(specs.mu, is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(s, P) for s in leaves)
+    # at least the big 2D weights get a zero-axis entry ("data")
+    named = [s for s in leaves if any(e is not None for e in s)]
+    assert len(named) > 0
+
+
+def test_sgd_momentum_descends():
+    params = {"w": jnp.array([4.0])}
+    state = sgd_init(params)
+    for _ in range(150):    # momentum oscillates through the minimum
+        params, state, _ = sgd_update({"w": 2 * params["w"]}, state, params,
+                                      lr=0.05)
+    assert abs(float(params["w"][0])) < 0.05
+
+
+def test_token_shards_deterministic_and_noniid():
+    sh = TokenShards(vocab=128, seq_len=16, batch=4, seed=1)
+    a1 = sh.batch_at(0, 0)
+    a2 = sh.batch_at(0, 0)
+    np.testing.assert_array_equal(a1["tokens"], a2["tokens"])
+    b = sh.batch_at(1, 0)
+    assert not np.array_equal(a1["tokens"], b["tokens"])
+    # labels are next-token shifted
+    full = sh.batch_at(0, 5)
+    assert full["tokens"].shape == (4, 16)
+
+
+def test_imagery_shards_noniid_priors():
+    sh = ImageryShards(img=16, batch=64, n_classes=10, seed=0)
+    l0 = sh.batch_at(0, 0)["labels"]
+    l1 = sh.batch_at(7, 0)["labels"]
+    h0 = np.bincount(l0, minlength=10) / 64
+    h1 = np.bincount(l1, minlength=10) / 64
+    assert np.abs(h0 - h1).sum() > 0.2        # different class priors
+
+
+def test_prefetch_preserves_order():
+    sh = TokenShards(vocab=64, seq_len=8, batch=2, seed=0)
+    it = prefetch(sh.iterate(0), size=2)
+    got = [np.asarray(next(it)["tokens"]) for _ in range(3)]
+    want = [sh.batch_at(0, i)["tokens"] for i in range(3)]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
