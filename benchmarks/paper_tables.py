@@ -17,7 +17,8 @@ from typing import Dict
 from repro.core.energy import (PassBudget, SplitCosts,
                                direct_download_costs)
 from repro.core.orbits import PAPER_PLANE
-from repro.core.resource_opt import best_split, solve, solve_pipelined
+from repro.core.resource_opt import (best_split_batch, solve, solve_batch,
+                                     solve_pipelined)
 from repro.core.splitting import (RESNET18_PAPER_CUTS, autoencoder_plan,
                                   resnet18_plan)
 
@@ -111,27 +112,31 @@ def fig3_top() -> Dict:
 
 
 def fig3_bottom() -> Dict:
-    """ResNet-18 energy at the three split points (+ direct download)."""
+    """ResNet-18 energy at the three split points (+ direct download).
+
+    The whole sweep is one :func:`solve_batch` call — the same batched
+    path constellation-scale cut × pass sweeps use.
+    """
     print("== Fig. 3 (bottom) / ResNet-18 split-point sweep ==")
     plan = resnet18_plan(img=224, n_classes=1000)
     b = _budget()
+    names = list(RESNET18_PAPER_CUTS)
+    cands = [plan.costs_at(RESNET18_PAPER_CUTS[nm]) for nm in names]
+    cands.append(direct_download_costs(
+        RAW_IMAGE_BITS, plan.costs_at(0).w2_flops / 3.0 * 3.0))
+    rep = solve_batch(b, cands)
     out = {}
-    for name, cut in RESNET18_PAPER_CUTS.items():
-        c = plan.costs_at(cut)
-        r = solve(b, c)
-        a = r.allocation
+    for i, name in enumerate(names):
+        a = rep.report_at(i).allocation
         out[name] = dict(e_total=a.e_total, e_comm=a.e_comm_down
                          + a.e_comm_up + a.e_isl,
                          e_proc=a.e_proc_sat + a.e_proc_gs,
                          feasible=a.feasible)
         print(f"  {name}: E={a.e_total:.4g} J (comm "
               f"{out[name]['e_comm']:.3g}, proc {out[name]['e_proc']:.3g}) "
-              f"Dtx={c.dtx_bits/1e6:.2f} Mb")
-    dd = direct_download_costs(RAW_IMAGE_BITS,
-                               plan.costs_at(0).w2_flops / 3.0 * 3.0)
-    r = solve(b, dd)
-    out["direct"] = dict(e_total=r.allocation.e_total)
-    print(f"  direct download: E={r.allocation.e_total:.4g} J")
+              f"Dtx={cands[i].dtx_bits/1e6:.2f} Mb")
+    out["direct"] = dict(e_total=float(rep.e_total[len(names)]))
+    print(f"  direct download: E={out['direct']['e_total']:.4g} J")
     order = [out[k]["e_total"] for k in ("l1", "l2", "l3")]
     print(f"  paper claim: deeper split (l3) wins -> ours "
           f"{'monotone decreasing OK' if order[0] > order[1] > order[2] else order}")
@@ -146,7 +151,7 @@ def beyond_paper() -> Dict:
     base = solve(b, plan.costs_at(5))                       # l2
     q = solve(b, plan.with_boundary_compression(0.25).costs_at(5))
     pipe = solve_pipelined(b, plan.costs_at(5), n_microbatches=8)
-    cbest, rbest = best_split(b, plan.enumerate_cuts())
+    cbest, rbest = best_split_batch(b, plan.enumerate_cuts())
     out = dict(
         base=base.allocation.e_total,
         int8=q.allocation.e_total,

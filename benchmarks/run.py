@@ -1,12 +1,20 @@
 """Benchmark entry point: one block per paper table/figure + the
-beyond-paper rows + a micro-benchmark of the SL step and kernels.
+beyond-paper rows + micro-benchmarks of the SL step, the batched pass
+engine (before/after rows for the vectorized problem-(13) solver and the
+scan-fused pass executor), and each kernel's jnp path.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run
+
+Alongside the stdout tables the run emits machine-readable JSON to
+``results/BENCH_<rev>.json`` (``<rev>`` = current git short hash, "dev"
+outside a checkout) so the perf trajectory is tracked across PRs, plus
+``results/bench.json`` as a stable latest-run alias.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
 
 
@@ -17,6 +25,101 @@ def _timeit(fn, *args, n=3, warmup=1, **kw):
     for _ in range(n):
         out = fn(*args, **kw)
     return (time.time() - t0) / n * 1e6, out      # us/call
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "dev"
+    except Exception:
+        return "dev"
+
+
+def engine_benchmarks():
+    """Before/after rows for the batched pass engine (the tentpole):
+
+    * problem-(13): loop of the scalar reference solver vs one
+      ``solve_batch`` call over the same >=256-instance cut x pass sweep;
+    * SL pass execution: 16 Python-loop ``make_sl_step`` + eager SGD
+      calls vs ONE jitted ``make_sl_pass`` scan of the same 16 steps.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import resource_opt
+    from repro.core.energy import PassBudget
+    from repro.core.sl_step import autoencoder_adapter, make_sl_pass, \
+        make_sl_step
+    from repro.core.splitting import resnet18_plan
+    from repro.data.synthetic import ImageryShards
+    from repro.train.optimizer import sgd_init, sgd_update
+
+    print("== pass-engine benchmarks (batched solver + fused SL pass) ==")
+    print("name,us_per_call,derived")
+    out = {}
+
+    # --- problem (13): 32 n_items variants x every ResNet-18 cut --------
+    plan = resnet18_plan(img=224, n_classes=1000)
+    cuts = plan.enumerate_cuts()
+    budgets, costs = [], []
+    for j in range(32):
+        b = PassBudget(n_items=50.0 * (j + 1))
+        for c in cuts:
+            budgets.append(b)
+            costs.append(c)
+    n_inst = len(costs)
+    assert n_inst >= 256, n_inst
+
+    def scalar_loop():
+        return [resource_opt.solve_reference(b, c)
+                for b, c in zip(budgets, costs)]
+
+    def batched():
+        return resource_opt.solve_batch(budgets, costs)
+
+    us_loop, _ = _timeit(scalar_loop, n=1, warmup=0)   # pure python: no jit
+    us_batch, rep = _timeit(batched, n=3, warmup=1)
+    speedup = us_loop / us_batch
+    out["solve_scalar_loop"] = dict(us=us_loop, n_instances=n_inst)
+    out["solve_batch"] = dict(us=us_batch, n_instances=n_inst,
+                              speedup_vs_scalar=speedup,
+                              feasible=int(rep.feasible.sum()))
+    print(f"solve13_scalar_loop_{n_inst},{us_loop:.0f},"
+          f"{us_loop/n_inst:.0f}us/instance")
+    print(f"solve13_batch_{n_inst},{us_batch:.0f},{speedup:.1f}x-speedup")
+
+    # --- SL pass: 16 steps, python loop vs one fused scan ---------------
+    ad = autoencoder_adapter(cut=5, img=32)
+    pa, pb = ad.init(jax.random.key(0))
+    shards = ImageryShards(img=32, batch=4)
+    batches = [jax.tree.map(jnp.asarray, shards.batch_at(0, i))
+               for i in range(16)]
+    step = make_sl_step(ad)
+    sl_pass = make_sl_pass(ad, lr=1e-2, donate=False)
+
+    def step_loop():
+        p_a, p_b = pa, pb
+        oa, ob = sgd_init(pa), sgd_init(pb)
+        for bt in batches:
+            r = step(p_a, p_b, bt)
+            p_a, oa, _ = sgd_update(r.grads_a, oa, p_a, lr=1e-2)
+            p_b, ob, _ = sgd_update(r.grads_b, ob, p_b, lr=1e-2)
+        return jax.block_until_ready(p_a)
+
+    def fused_pass():
+        r = sl_pass(pa, pb, sgd_init(pa), sgd_init(pb), batches)
+        return jax.block_until_ready(r.params_a)
+
+    us_steps, _ = _timeit(step_loop, n=3, warmup=1)
+    us_pass, _ = _timeit(fused_pass, n=3, warmup=1)
+    speedup = us_steps / us_pass
+    out["sl_step_loop_16"] = dict(us=us_steps)
+    out["sl_pass_16"] = dict(us=us_pass, speedup_vs_step_loop=speedup)
+    print(f"sl_step_loop_16,{us_steps:.0f},16-python-dispatches")
+    print(f"sl_pass_16,{us_pass:.0f},{speedup:.2f}x-speedup-one-scan")
+    return out
 
 
 def micro_benchmarks():
@@ -32,6 +135,7 @@ def micro_benchmarks():
     print("== micro-benchmarks (CPU reference timings) ==")
     print("name,us_per_call,derived")
     rng = np.random.default_rng(0)
+    out = {}
 
     ad = autoencoder_adapter(cut=5, img=32)
     pa, pb = ad.init(jax.random.key(0))
@@ -39,6 +143,7 @@ def micro_benchmarks():
                          .batch_at(0, 0))
     step = make_sl_step(ad)
     us, _ = _timeit(lambda: step(pa, pb, batch))
+    out["sl_step_autoencoder"] = us
     print(f"sl_step_autoencoder,{us:.0f},loss+both-grads")
 
     q = jnp.asarray(rng.standard_normal((1, 8, 512, 64)), jnp.float32)
@@ -48,6 +153,7 @@ def micro_benchmarks():
         q, k, v, causal=True, use_pallas=False))
     us, _ = _timeit(lambda: jax.block_until_ready(f(q, k, v)))
     flops = 4 * 8 * 512 * 512 / 2 * 64
+    out["flash_attention_512"] = us
     print(f"flash_attention_512,{us:.0f},{flops/us/1e3:.1f}GFLOP/s")
 
     x = jnp.asarray(rng.standard_normal((1, 512, 4, 64)), jnp.float32)
@@ -56,12 +162,15 @@ def micro_benchmarks():
     b = jnp.asarray(rng.standard_normal((1, 512, 16)), jnp.float32)
     g = jax.jit(lambda *a: ops.mamba_scan(*a, chunk=128, use_pallas=False))
     us, _ = _timeit(lambda: jax.block_until_ready(g(x, dt, alog, b, b)[0]))
+    out["mamba_scan_512"] = us
     print(f"mamba_scan_512,{us:.0f},chunked-ssd")
 
     xq = jnp.asarray(rng.standard_normal((4096, 512)), jnp.float32)
     h = jax.jit(lambda t: ops.quantize_boundary(t, use_pallas=False))
     us, _ = _timeit(lambda: jax.block_until_ready(h(xq)[0]))
+    out["split_quant_4096x512"] = us
     print(f"split_quant_4096x512,{us:.0f},{xq.nbytes/us/1e3:.2f}GB/s")
+    return out
 
 
 def main() -> None:
@@ -69,7 +178,11 @@ def main() -> None:
 
     t0 = time.time()
     results = paper_tables.run_all()
-    micro_benchmarks()
+    results["engine"] = engine_benchmarks()
+    results["micro"] = micro_benchmarks()
+    rev = _git_rev()
+    results["meta"] = {"rev": rev, "wall_s": time.time() - t0,
+                       "unix_time": time.time()}
 
     os.makedirs("results", exist_ok=True)
 
@@ -82,10 +195,13 @@ def main() -> None:
             return o
         return float(o) if hasattr(o, "__float__") else str(o)
 
-    with open("results/bench.json", "w") as f:
-        json.dump(_clean(results), f, indent=1)
+    cleaned = _clean(results)
+    bench_path = os.path.join("results", f"BENCH_{rev}.json")
+    for path in (bench_path, os.path.join("results", "bench.json")):
+        with open(path, "w") as f:
+            json.dump(cleaned, f, indent=1)
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s "
-          f"-> results/bench.json")
+          f"-> {bench_path} (+ results/bench.json)")
 
 
 if __name__ == "__main__":

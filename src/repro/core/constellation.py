@@ -5,9 +5,13 @@ Implements the paper's time-window protocol end to end:
   pass k: satellite s = ring[k mod N] is visible for T_pass seconds.
     1. resource allocation: solve problem (13) for this pass's split
        costs (exact dual bisection, core/resource_opt); if infeasible,
-       shed batch fraction (straggler mitigation).
-    2. run real SL train steps (core/sl_step) on the satellite's local
-       non-IID shard until the allocated item budget is consumed.
+       shed batch fraction (straggler mitigation).  The boundary payload
+       is measured shape-only (sl_step.boundary_bits), no probe step.
+    2. run all allocated SL train steps (core/sl_step.make_sl_pass) on
+       the satellite's local non-IID shard in ONE jitted lax.scan —
+       params and optimizer state ride the scan carry with donated
+       buffers, so a pass costs one dispatch regardless of step count
+       (the old engine paid k Python dispatches, hard-capped at 16).
     3. account energy per eq. (11) with the *measured* boundary payloads.
     4. hand segment A to the next satellite over the ISL — implemented
        as an integrity-checked checkpoint (ckpt.save_handoff), so the
@@ -36,8 +40,9 @@ import numpy as np
 from repro.core import resource_opt
 from repro.core.energy import PassBudget, SplitCosts
 from repro.core.orbits import OrbitalPlane
-from repro.core.sl_step import SplitAdapter, make_sl_step
-from repro.train.optimizer import SGDState, sgd_init, sgd_update
+from repro.core.sl_step import (SplitAdapter, make_boundary_meter,
+                                make_sl_pass)
+from repro.train.optimizer import SGDState, sgd_init
 from repro.utils.treeutil import tree_bytes
 
 
@@ -81,6 +86,14 @@ class ConstellationConfig:
     handoff_dir: Optional[str] = None    # persist handoffs (fault tolerance)
     join_events: Dict[int, int] = dataclasses.field(default_factory=dict)
     leave_events: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Simulation-cost ceiling on fused steps per pass.  The allocation
+    # itself is uncapped (problem 13 decides the item budget); this only
+    # bounds how many of those steps the simulator executes when a
+    # shedding scenario keeps millions of items.  None = run them all,
+    # streamed through the scan in pass_chunk_steps-sized pieces (memory
+    # stays bounded, but simulated compute is proportional to the count).
+    max_steps_per_pass: Optional[int] = 128
+    pass_chunk_steps: int = 256          # batches materialized per scan
 
 
 class ConstellationSim:
@@ -99,14 +112,17 @@ class ConstellationSim:
         self.params_a, self.params_b = pa, pb
         self.opt_a: SGDState = sgd_init(pa)
         self.opt_b: SGDState = sgd_init(pb)
-        self.step = make_sl_step(adapter,
-                                 quantize_boundary=cfg.quantize_boundary)
+        self.sl_pass = make_sl_pass(adapter,
+                                    quantize_boundary=cfg.quantize_boundary,
+                                    lr=cfg.lr)
 
         n = budget.plane.n_sats
         self.sats: List[SatelliteState] = [
             SatelliteState(i, cfg.battery_j) for i in range(n)]
         self.records: List[PassRecord] = []
         self._batch_idx = 0
+        self._boundary_bits = make_boundary_meter(
+            adapter, quantize_boundary=cfg.quantize_boundary)
 
     # ------------------------------------------------------------- internals
     def _ring(self) -> List[SatelliteState]:
@@ -166,28 +182,38 @@ class ConstellationSim:
             return PassRecord(k, sat.sat_id, "skipped_energy",
                               d_isl_bits=8.0 * tree_bytes(self.params_a))
 
-        # one probe batch to measure the true boundary payload
+        # measure the true boundary payload shape-only (no probe step);
+        # memoized per batch shape so steady-state passes trace nothing
         batch = self.data_for_sat(sat.sat_id, self._batch_idx)
         n_in_batch = next(iter(batch.values())).shape[0]
-        probe = self.step(self.params_a, self.params_b, batch)
-        dtx_per_item = probe.dtx_bits_down / n_in_batch
+        dtx_per_item = self._boundary_bits(batch) / n_in_batch
 
         costs = self._measured_costs(dtx_per_item)
         shed = self._solve_pass(costs)
         alloc = shed.report.allocation
         n_items = shed.n_items_kept
         n_steps = max(1, int(round(n_items / n_in_batch)))
+        if cfg.max_steps_per_pass is not None:
+            n_steps = min(n_steps, cfg.max_steps_per_pass)
 
-        losses = []
-        self._apply(probe)
-        losses.append(float(probe.loss))
-        for _ in range(min(n_steps - 1, 16)):     # cap sim steps per pass
-            self._batch_idx += 1
-            batch = self.data_for_sat(sat.sat_id, self._batch_idx)
-            res = self.step(self.params_a, self.params_b, batch)
-            self._apply(res)
-            losses.append(float(res.loss))
-        self._batch_idx += 1
+        # the whole pass through fused scans, streamed in chunks so host
+        # memory stays bounded even for uncapped shedding-scale passes
+        loss_parts = []
+        start = 0
+        while start < n_steps:
+            m = min(max(cfg.pass_chunk_steps, 1), n_steps - start)
+            batches = [batch if start + j == 0 else
+                       self.data_for_sat(sat.sat_id,
+                                         self._batch_idx + start + j)
+                       for j in range(m)]
+            res = self.sl_pass(self.params_a, self.params_b,
+                               self.opt_a, self.opt_b, batches)
+            self.params_a, self.params_b = res.params_a, res.params_b
+            self.opt_a, self.opt_b = res.opt_a, res.opt_b
+            loss_parts.append(np.asarray(res.losses, dtype=np.float64))
+            start += m
+        losses = np.concatenate(loss_parts)
+        self._batch_idx += n_steps
 
         e = alloc.e_total
         sat.battery_j -= (alloc.e_proc_sat + alloc.e_comm_down + alloc.e_isl)
@@ -204,12 +230,6 @@ class ConstellationSim:
             e_comm_j=alloc.e_comm_down + alloc.e_comm_up,
             e_isl_j=alloc.e_isl, t_total_s=alloc.t_total,
             d_isl_bits=costs.d_isl_bits, n_items=n_items)
-
-    def _apply(self, res):
-        self.params_a, self.opt_a, _ = sgd_update(
-            res.grads_a, self.opt_a, self.params_a, lr=self.cfg.lr)
-        self.params_b, self.opt_b, _ = sgd_update(
-            res.grads_b, self.opt_b, self.params_b, lr=self.cfg.lr)
 
     def _handoff(self, k: int):
         """Ship segment A to the successor (checkpoint == ISL payload)."""

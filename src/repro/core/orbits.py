@@ -12,7 +12,10 @@ full-circle normalization ``T_o * alpha_pass / (2*pi)``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
+
+import numpy as np
 
 # Physical constants (SI).
 R_EARTH_M = 6_371_000.0          # mean Earth radius [m]
@@ -70,23 +73,24 @@ class OrbitalPlane:
         return 2.0 * (R_EARTH_M + self.altitude_m) * math.sin(math.pi / self.n_sats)
 
     # --- propagation helpers used by eq. (12) --------------------------
+    @functools.lru_cache(maxsize=64)
     def mean_slant_range_m(self, n_samples: int = 256) -> float:
         """Average GS<->LEO distance over the visible arc.
 
         The elevation sweeps ``eps_min -> 90° -> eps_min``; by symmetry we
         average d(eps) over the half-arc parameterized by the central
-        angle (uniform in time for a circular orbit).
+        angle (uniform in time for a circular orbit).  Memoized per plane
+        (the dataclass is frozen/hashable): this sits on the hot path of
+        every problem-(13) solve, and re-running the quadrature per solve
+        used to dominate constellation-scale sweeps.
         """
         re, h = R_EARTH_M, self.altitude_m
         alpha_half = self.pass_central_angle_rad / 2.0
-        acc = 0.0
-        for i in range(n_samples):
-            # central angle offset from nadir-closest point, uniform in time
-            phi = alpha_half * (i + 0.5) / n_samples
-            # law of cosines between GS (radius re) and sat (radius re+h)
-            d = math.sqrt(re**2 + (re + h) ** 2 - 2.0 * re * (re + h) * math.cos(phi))
-            acc += d
-        return acc / n_samples
+        # central angle offset from nadir-closest point, uniform in time
+        phi = alpha_half * (np.arange(n_samples) + 0.5) / n_samples
+        # law of cosines between GS (radius re) and sat (radius re+h)
+        d = np.sqrt(re**2 + (re + h) ** 2 - 2.0 * re * (re + h) * np.cos(phi))
+        return float(d.mean())
 
     @property
     def mean_prop_delay_s(self) -> float:

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -102,7 +104,7 @@ def decode_attention(q, k, v, lengths, *, block_k: int = 512,
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths2d, q, k, v)

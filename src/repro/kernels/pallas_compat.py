@@ -1,0 +1,30 @@
+"""Version-compat shims for the Pallas TPU API.
+
+jax renamed the TPU lowering-parameter dataclass across releases:
+
+  * jax <= 0.4.x:  ``jax.experimental.pallas.tpu.TPUCompilerParams``
+  * jax >= 0.5.x:  ``jax.experimental.pallas.tpu.CompilerParams``
+
+Every kernel in this package goes through :func:`tpu_compiler_params`
+instead of naming either class directly, so the same source runs on the
+pinned toolchain (0.4.37, where only ``TPUCompilerParams`` exists) and
+on newer jax without edits.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    _COMPILER_PARAMS_CLS = pltpu.CompilerParams
+else:                                       # jax 0.4.x spelling
+    _COMPILER_PARAMS_CLS = pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``.
+
+    Accepts the keyword arguments common to both spellings
+    (``dimension_semantics=...`` etc.) and forwards them to whichever
+    class this jax version provides.
+    """
+    return _COMPILER_PARAMS_CLS(**kwargs)

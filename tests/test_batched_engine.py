@@ -1,0 +1,301 @@
+"""Batched pass engine: solve_batch parity vs the scalar reference
+solver, best_split_batch vs the legacy sweep, and make_sl_pass parity
+vs sequential make_sl_step + sgd_update calls."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import resource_opt as ro
+from repro.core.energy import PassBudget, SplitCosts, direct_download_costs
+from repro.core.sl_step import (autoencoder_adapter, boundary_bits,
+                                make_sl_pass, make_sl_step)
+from repro.data.synthetic import ImageryShards
+from repro.train.optimizer import sgd_init, sgd_update
+
+BUDGET = PassBudget()
+
+
+def _grid_costs():
+    """Deterministic instance grid: feasible, comm-heavy, proc-heavy,
+    phase-absent, and infeasible (shedding-regime) cases."""
+    w_max = BUDGET.sat_device.peak_flops * BUDGET.plane.pass_duration_s \
+        / BUDGET.n_items
+    cases = [
+        SplitCosts(1e9, 1e9, 1e4, 1e6),              # easy feasible
+        SplitCosts(3e11, 1e11, 1e6, 1e8),            # paper-scale
+        SplitCosts(0.0, 1e9, 1e5, 0.0),              # no sat segment
+        SplitCosts(1e9, 1e9, 0.0, 1e6),              # no comm phases
+        SplitCosts(0.0, 1e6, 0.0, 0.0),              # gs-proc only
+        SplitCosts(w_max * 0.9, 1e6, 1e3, 0.0),      # near the deadline
+        SplitCosts(w_max * 1000, 1e6, 1e3, 0.0),     # infeasible (shed)
+        SplitCosts(1e9, 1e9, 5e9, 1e6),              # comm-infeasible
+        direct_download_costs(1.605e6, 3.4e9),       # fig-3 baseline
+        # Lambert-W branch-point regression: tiny payloads push λ·g̃
+        # below float eps, where W((λg̃−1)/e) alone returns NaN
+        SplitCosts(0.0, 0.0, 1.0, 0.0),
+        SplitCosts(0.0, 0.0, 1e-3, 0.0),
+        SplitCosts(1e9, 1e9, 1.0, 1e6),
+    ]
+    rng = np.random.default_rng(7)
+    for _ in range(24):
+        cases.append(SplitCosts(
+            w1_flops=float(rng.uniform(1e8, 3e11)),
+            w2_flops=float(rng.uniform(1e8, 3e11)),
+            dtx_bits=float(rng.uniform(1e3, 1e7)),
+            d_isl_bits=float(rng.uniform(0, 1e9))))
+    return cases
+
+
+def test_solve_batch_matches_scalar_reference():
+    costs = _grid_costs()
+    batch = ro.solve_batch(BUDGET, costs)
+    assert batch.n == len(costs)
+    for i, c in enumerate(costs):
+        ref = ro.solve_reference(BUDGET, c)
+        assert bool(batch.feasible[i]) == ref.allocation.feasible, c
+        e_ref, e_b = ref.allocation.e_total, batch.e_total[i]
+        t_ref, t_b = ref.allocation.t_total, batch.t_total[i]
+        assert e_b == pytest.approx(e_ref, rel=1e-6, abs=1e-12), c
+        assert t_b == pytest.approx(t_ref, rel=1e-6, abs=1e-12), c
+        if ref.allocation.feasible:
+            assert batch.kkt_residual[i] < 1e-6
+
+
+def test_solve_wrapper_equals_batch_element():
+    costs = _grid_costs()[:6]
+    batch = ro.solve_batch(BUDGET, costs)
+    for i, c in enumerate(costs):
+        rep = ro.solve(BUDGET, c)
+        # identical path, but the lockstep bisection takes a different
+        # iteration count per batch composition -> convergence-level noise
+        assert rep.allocation.e_total == pytest.approx(
+            float(batch.e_total[i]), rel=1e-9, abs=1e-15)
+        assert rep.allocation.feasible == bool(batch.feasible[i])
+
+
+def test_solve_batch_broadcast_and_length_check():
+    costs = SplitCosts(1e9, 1e9, 1e4, 1e6)
+    budgets = [PassBudget(n_items=100.0 * (j + 1)) for j in range(5)]
+    rep = ro.solve_batch(budgets, costs)
+    assert rep.n == 5
+    # more items => more energy (monotone sanity across the broadcast)
+    assert np.all(np.diff(rep.e_total) > 0)
+    with pytest.raises(ValueError):
+        ro.solve_batch(budgets, [costs, costs])
+
+
+def test_solve_batch_vs_scipy():
+    scipy_opt = pytest.importorskip("scipy.optimize")
+    costs = [c for c in _grid_costs()[:6]]
+    rep = ro.solve_batch(BUDGET, costs)
+    for i, c in enumerate(costs):
+        if not rep.feasible[i]:
+            continue
+        phases = [p for p in ro._build_phases(BUDGET, c) if p is not None]
+        if len(phases) < 2:
+            continue
+        T = BUDGET.time_budget_s(c)
+        x0 = np.array([T / len(phases)] * len(phases))
+        res = scipy_opt.minimize(
+            lambda x: sum(p.energy(t) for p, t in zip(phases, x)), x0,
+            bounds=[(p.t_min, None) for p in phases],
+            constraints=[{"type": "ineq", "fun": lambda x: T - x.sum()}],
+            method="SLSQP", options={"maxiter": 800, "ftol": 1e-16})
+        e_var = rep.e_total[i] - rep.e_isl[i]
+        assert e_var <= res.fun * (1 + 1e-4) + 1e-12
+
+@given(w1=st.floats(0, 5e12), w2=st.floats(1e6, 5e12),
+       dtx=st.floats(1e2, 5e9), disl=st.floats(0, 1e9))
+@settings(max_examples=40, deadline=None)
+def test_solve_batch_matches_reference_property(w1, w2, dtx, disl):
+    c = SplitCosts(w1_flops=w1, w2_flops=w2, dtx_bits=dtx, d_isl_bits=disl)
+    ref = ro.solve_reference(BUDGET, c)
+    batch = ro.solve_batch(BUDGET, [c])
+    assert bool(batch.feasible[0]) == ref.allocation.feasible
+    if np.isfinite(ref.allocation.e_total):
+        assert batch.e_total[0] == pytest.approx(ref.allocation.e_total,
+                                                 rel=1e-6, abs=1e-12)
+
+
+def test_best_split_batch_matches_scalar_sweep():
+    from repro.core.splitting import resnet18_plan
+    cands = resnet18_plan().enumerate_cuts()
+
+    # legacy scalar sweep (what best_split did before the batch path)
+    best = None
+    for c in cands:
+        rep = ro.solve_reference(BUDGET, c)
+        if not rep.allocation.feasible:
+            continue
+        if best is None or rep.allocation.e_total < best[1].allocation.e_total:
+            best = (c, rep)
+    cb, rb = ro.best_split_batch(BUDGET, cands)
+    assert cb.name == best[0].name
+    assert rb.allocation.e_total == pytest.approx(
+        best[1].allocation.e_total, rel=1e-6)
+
+
+def test_best_split_batch_infeasible_falls_back_to_shedding():
+    w_max = BUDGET.sat_device.peak_flops * BUDGET.plane.pass_duration_s \
+        / BUDGET.n_items
+    cands = [SplitCosts(w_max * 100, 1e6, 1e3, 0.0, name="c100"),
+             SplitCosts(w_max * 2, 1e6, 1e3, 0.0, name="c2")]
+    c, rep = ro.best_split_batch(BUDGET, cands)
+    assert c.name == "c2"          # sheds the least
+    assert rep.allocation.feasible
+
+
+def test_report_at_consistent_with_arrays():
+    costs = _grid_costs()
+    batch = ro.solve_batch(BUDGET, costs)
+    for i in (0, 1, 6, 8):
+        rep = batch.report_at(i)
+        assert rep.allocation.e_total == pytest.approx(
+            float(batch.e_total[i]), rel=1e-9, abs=1e-15)
+        assert rep.allocation.feasible == bool(batch.feasible[i])
+
+
+# --------------------------------------------------------------------------
+# make_sl_pass vs sequential make_sl_step
+# --------------------------------------------------------------------------
+
+SHARDS = ImageryShards(img=32, batch=4)
+
+
+def _batches(k, shard=0):
+    return [jax.tree.map(jnp.asarray, SHARDS.batch_at(shard, i))
+            for i in range(k)]
+
+
+def _sequential(adapter, pa, pb, batches, lr=1e-2, quantize=False):
+    step = make_sl_step(adapter, quantize_boundary=quantize)
+    oa, ob = sgd_init(pa), sgd_init(pb)
+    losses = []
+    for bt in batches:
+        r = step(pa, pb, bt)
+        pa, oa, _ = sgd_update(r.grads_a, oa, pa, lr=lr)
+        pb, ob, _ = sgd_update(r.grads_b, ob, pb, lr=lr)
+        losses.append(float(r.loss))
+    return np.asarray(losses), pa, pb, r
+
+
+def test_bucket_schedule():
+    from repro.core.sl_step import _bucket_size
+    assert [_bucket_size(k) for k in (1, 2, 3, 5, 16)] == [1, 2, 4, 8, 16]
+    # above 16: 1/8-octave granularity, padding bounded at 25%
+    for k in range(17, 400):
+        kb = _bucket_size(k)
+        assert kb >= k
+        assert (kb - k) / k <= 0.25
+
+
+@pytest.mark.parametrize("k", [1, 4, 5, 17])
+def test_sl_pass_matches_sequential_steps(k):
+    """k fused scan steps == k sequential step+update calls; k=5 and
+    k=17 also exercise the bucketing (padded steps must be no-ops)."""
+    ad = autoencoder_adapter(cut=5, img=32)
+    pa, pb = ad.init(jax.random.key(0))
+    batches = _batches(k)
+
+    losses_ref, pa_ref, pb_ref, last = _sequential(ad, pa, pb, batches)
+    res = make_sl_pass(ad, lr=1e-2)(pa, pb, sgd_init(pa), sgd_init(pb),
+                                    batches)
+    assert res.n_steps == k
+    assert res.losses.shape == (k,)
+    np.testing.assert_allclose(np.asarray(res.losses), losses_ref,
+                               rtol=1e-5, atol=1e-6)
+    for got, ref in zip(jax.tree.leaves(res.params_a),
+                        jax.tree.leaves(pa_ref)):
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    for got, ref in zip(jax.tree.leaves(res.params_b),
+                        jax.tree.leaves(pb_ref)):
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    # measured boundary payload matches the probe-step measurement
+    assert res.dtx_bits_down == last.dtx_bits_down
+    assert res.dtx_bits_down == boundary_bits(ad, batches[0])
+
+
+def test_sl_pass_quantized_boundary_parity():
+    ad = autoencoder_adapter(cut=5, img=32)
+    pa, pb = ad.init(jax.random.key(2))
+    batches = _batches(3, shard=1)
+    losses_ref, _, _, last = _sequential(ad, pa, pb, batches, quantize=True)
+    res = make_sl_pass(ad, quantize_boundary=True, lr=1e-2)(
+        pa, pb, sgd_init(pa), sgd_init(pb), batches)
+    np.testing.assert_allclose(np.asarray(res.losses), losses_ref,
+                               rtol=1e-5, atol=1e-6)
+    assert res.dtx_bits_down == last.dtx_bits_down   # int8: 4x smaller
+
+
+def test_sl_pass_ragged_batches_match_sequential():
+    """A partial final batch (real datasets) must not crash the stack:
+    same-shape groups are scanned and chained, matching sequential."""
+    ad = autoencoder_adapter(cut=5, img=32)
+    pa, pb = ad.init(jax.random.key(3))
+    full = _batches(3, shard=2)
+    partial = jax.tree.map(lambda x: x[:2], _batches(4, shard=2)[3])
+    batches = full + [partial]
+
+    losses_ref, pa_ref, _, _ = _sequential(ad, pa, pb, batches)
+    res = make_sl_pass(ad, lr=1e-2)(pa, pb, sgd_init(pa), sgd_init(pb),
+                                    batches)
+    assert res.n_steps == 4
+    np.testing.assert_allclose(np.asarray(res.losses), losses_ref,
+                               rtol=1e-5, atol=1e-6)
+    for got, ref in zip(jax.tree.leaves(res.params_a),
+                        jax.tree.leaves(pa_ref)):
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_constellation_streams_chunks():
+    """pass_chunk_steps smaller than n_steps: the pass runs in several
+    chained scans and still consumes every allocated batch."""
+    from repro.core.constellation import (ConstellationConfig,
+                                          ConstellationSim)
+
+    def data(s, i):
+        return jax.tree.map(jnp.asarray, SHARDS.batch_at(s, i))
+
+    ad = autoencoder_adapter(cut=5, img=32)
+    sim = ConstellationSim(ad, PassBudget(n_items=40.0), data,
+                           ConstellationConfig(n_passes=1, batch_size=4,
+                                               pass_chunk_steps=4))
+    recs = sim.run()
+    assert recs[0].action == "trained"
+    assert sim._batch_idx == 10        # 40 items / batch 4, chunks of 4
+
+
+def test_sl_pass_accepts_prestacked_batches():
+    ad = autoencoder_adapter(cut=5, img=32)
+    pa, pb = ad.init(jax.random.key(0))
+    batches = _batches(2)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    # donate=False: the default donates the param buffers to the jitted
+    # call, so the same arrays cannot feed two separate passes.
+    r_list = make_sl_pass(ad, donate=False)(pa, pb, sgd_init(pa),
+                                            sgd_init(pb), batches)
+    r_stk = make_sl_pass(ad, donate=False)(pa, pb, sgd_init(pa),
+                                           sgd_init(pb), stacked)
+    np.testing.assert_allclose(np.asarray(r_list.losses),
+                               np.asarray(r_stk.losses), rtol=1e-6)
+
+
+def test_constellation_runs_beyond_old_16_step_cap():
+    """96 items / batch 4 = 24 fused steps — more than the removed cap."""
+    from repro.core.constellation import (ConstellationConfig,
+                                          ConstellationSim)
+
+    def data(s, i):
+        return jax.tree.map(jnp.asarray, SHARDS.batch_at(s, i))
+
+    ad = autoencoder_adapter(cut=5, img=32)
+    sim = ConstellationSim(ad, PassBudget(n_items=96.0), data,
+                           ConstellationConfig(n_passes=1, batch_size=4))
+    recs = sim.run()
+    assert recs[0].action == "trained"
+    assert recs[0].n_items == pytest.approx(96.0)
+    assert sim._batch_idx == 24        # all 24 steps consumed, one pass

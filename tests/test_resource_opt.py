@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.energy import (PassBudget, SplitCosts, direct_download_costs,
                                evaluate_raw)
