@@ -12,6 +12,8 @@ outside a checkout) so the perf trajectory is tracked across PRs, plus
 """
 from __future__ import annotations
 
+import dataclasses
+import glob
 import json
 import os
 import subprocess
@@ -44,17 +46,22 @@ def engine_benchmarks():
     * problem-(13): loop of the scalar reference solver vs one
       ``solve_batch`` call over the same >=256-instance cut x pass sweep;
     * SL pass execution: 16 Python-loop ``make_sl_step`` + eager SGD
-      calls vs ONE jitted ``make_sl_pass`` scan of the same 16 steps.
+      calls vs ONE jitted ``make_sl_pass`` scan of the same 16 steps;
+    * revolution planning: a per-pass scalar ``solve_with_shedding``
+      loop (the pre-planner scheduler) vs one ``RevolutionPlanner``
+      batched solve for the same ring revolution.
     """
     import jax
     import jax.numpy as jnp
     from repro.core import resource_opt
     from repro.core.energy import PassBudget
+    from repro.core.mission import RevolutionPlanner
     from repro.core.sl_step import autoencoder_adapter, make_sl_pass, \
         make_sl_step
     from repro.core.splitting import resnet18_plan
+    from repro.core.train_state import SLTrainState
     from repro.data.synthetic import ImageryShards
-    from repro.train.optimizer import sgd_init, sgd_update
+    from repro.train.optimizer import sgd, sgd_init, sgd_update
 
     print("== pass-engine benchmarks (batched solver + fused SL pass) ==")
     print("name,us_per_call,derived")
@@ -97,7 +104,8 @@ def engine_benchmarks():
     batches = [jax.tree.map(jnp.asarray, shards.batch_at(0, i))
                for i in range(16)]
     step = make_sl_step(ad)
-    sl_pass = make_sl_pass(ad, lr=1e-2, donate=False)
+    opt = sgd(lr=1e-2)
+    sl_pass = make_sl_pass(ad, optimizer=opt, donate=False)
 
     def step_loop():
         p_a, p_b = pa, pb
@@ -109,7 +117,7 @@ def engine_benchmarks():
         return jax.block_until_ready(p_a)
 
     def fused_pass():
-        r = sl_pass(pa, pb, sgd_init(pa), sgd_init(pb), batches)
+        r = sl_pass(SLTrainState.create(pa, pb, opt), batches)
         return jax.block_until_ready(r.params_a)
 
     us_steps, _ = _timeit(step_loop, n=3, warmup=1)
@@ -119,6 +127,36 @@ def engine_benchmarks():
     out["sl_pass_16"] = dict(us=us_pass, speedup_vs_step_loop=speedup)
     print(f"sl_step_loop_16,{us_steps:.0f},16-python-dispatches")
     print(f"sl_pass_16,{us_pass:.0f},{speedup:.2f}x-speedup-one-scan")
+
+    # --- revolution planning: per-pass scalar solves vs one planner -----
+    # 64-sat ring, work spread so some rows shed: the pre-planner
+    # scheduler paid one scalar solve_with_shedding per pass.
+    ring_ids = list(range(64))
+    w_max = PassBudget().sat_device.peak_flops \
+        * PassBudget().plane.pass_duration_s / PassBudget().n_items
+    rev_budgets = [PassBudget(n_items=200.0 + 25.0 * s) for s in ring_ids]
+    rev_costs = [dataclasses.replace(cuts[s % len(cuts)],
+                                     w1_flops=w_max * (0.02 * s))
+                 for s in ring_ids]
+
+    def per_pass_loop():
+        return [resource_opt.solve_with_shedding(b, c)
+                for b, c in zip(rev_budgets, rev_costs)]
+
+    def planner_call():
+        return RevolutionPlanner().plan_revolution(ring_ids, rev_budgets,
+                                                   rev_costs)
+
+    us_scalar, _ = _timeit(per_pass_loop, n=1, warmup=0)
+    us_planner, entries = _timeit(planner_call, n=3, warmup=1)
+    speedup = us_scalar / us_planner
+    out["revolution_scalar_loop_64"] = dict(us=us_scalar)
+    out["revolution_planner_64"] = dict(us=us_planner,
+                                        speedup_vs_scalar=speedup,
+                                        n_sats=len(entries))
+    print(f"revolution_scalar_loop_64,{us_scalar:.0f},64-scalar-sheds")
+    print(f"revolution_planner_64,{us_planner:.0f},"
+          f"{speedup:.1f}x-speedup-one-batched-solve")
     return out
 
 
@@ -173,6 +211,80 @@ def micro_benchmarks():
     return out
 
 
+def _flatten_metrics(obj, prefix=""):
+    """Dotted-path -> float map of every numeric leaf in a results dict."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_flatten_metrics(v, f"{prefix}{k}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix.rstrip(".")] = float(obj)
+    return out
+
+
+def trend_report(results_dir: str, current: dict, rev: str,
+                 threshold: float = 0.20) -> dict:
+    """Compare this run against the previous ``BENCH_<rev>.json``.
+
+    Timing metrics (dotted paths ending in ``.us`` or named ``us_*``)
+    regress when they grow; each >``threshold`` change is flagged.  The
+    report is printed and returned so it lands inside the current JSON.
+    """
+    prev_path, prev = None, None
+    candidates = []
+    for p in glob.glob(os.path.join(results_dir, "BENCH_*.json")):
+        if os.path.basename(p) == f"BENCH_{rev}.json":
+            continue
+        try:
+            with open(p) as f:
+                data = json.load(f)
+            candidates.append((data.get("meta", {}).get("unix_time", 0.0),
+                               p, data))
+        except (json.JSONDecodeError, OSError):
+            continue
+    if candidates:
+        _, prev_path, prev = max(candidates, key=lambda t: t[0])
+
+    report = {"baseline": prev_path and os.path.basename(prev_path),
+              "threshold": threshold, "regressions": [],
+              "improvements": []}
+    if prev is None:
+        print("\n== trend report: no previous BENCH_<rev>.json — baseline "
+              "run ==")
+        return report
+
+    cur_m = _flatten_metrics(current)
+    prev_m = _flatten_metrics(prev)
+    # timing metrics: engine rows expose an `us` field; micro rows are
+    # bare us/call floats.  Table values (losses, energies) are not
+    # regressions in the timing sense and are left out.
+    timing = {k for k in cur_m if k.endswith(".us") or k.startswith("micro.")}
+    for k in sorted(timing & prev_m.keys()):
+        if prev_m[k] <= 0.0:
+            continue
+        delta = cur_m[k] / prev_m[k] - 1.0
+        row = {"metric": k, "prev_us": prev_m[k], "cur_us": cur_m[k],
+               "delta_pct": 100.0 * delta}
+        if delta > threshold:
+            report["regressions"].append(row)
+        elif delta < -threshold:
+            report["improvements"].append(row)
+
+    base = report["baseline"]
+    print(f"\n== trend report vs {base} "
+          f"(flagging >{threshold:.0%} timing changes) ==")
+    if not report["regressions"] and not report["improvements"]:
+        print(f"  all {len(timing & prev_m.keys())} shared timing metrics "
+              f"within {threshold:.0%}")
+    for row in report["regressions"]:
+        print(f"  REGRESSION {row['metric']}: {row['prev_us']:.0f}us -> "
+              f"{row['cur_us']:.0f}us (+{row['delta_pct']:.0f}%)")
+    for row in report["improvements"]:
+        print(f"  improved   {row['metric']}: {row['prev_us']:.0f}us -> "
+              f"{row['cur_us']:.0f}us ({row['delta_pct']:.0f}%)")
+    return report
+
+
 def main() -> None:
     from benchmarks import paper_tables
 
@@ -185,6 +297,7 @@ def main() -> None:
                        "unix_time": time.time()}
 
     os.makedirs("results", exist_ok=True)
+    results["trend"] = trend_report("results", results, rev)
 
     def _clean(o):
         if isinstance(o, dict):

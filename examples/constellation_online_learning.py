@@ -30,6 +30,7 @@ with tempfile.TemporaryDirectory() as handoff_dir:
         cfg=ConstellationConfig(
             n_passes=25,                 # one full ring revolution
             batch_size=8,
+            optimizer="sgd",             # or "adamw" (LM-track schedule)
             quantize_boundary=True,      # int8 boundary (beyond-paper)
             fail_prob=0.08,              # random satellite failures
             battery_j=2_000.0,
@@ -48,3 +49,6 @@ with tempfile.TemporaryDirectory() as handoff_dir:
               f"{r.e_total_j:11.4g} {r.e_comm_j:10.4g} "
               f"{r.d_isl_bits / 1e6:10.2f}")
     print("\nsummary:", sim.summary())
+    print(f"planner: {sim.planner.solve_calls} batched solve(s), "
+          f"{sim.planner.invalidations} invalidation(s) "
+          f"for {len(records)} passes")

@@ -18,14 +18,18 @@ from repro import configs
 from repro.core.energy import PassBudget
 from repro.core.resource_opt import solve
 from repro.core.sl_step import lm_adapter, make_sl_step
+from repro.core.train_state import SLTrainState
 from repro.data.synthetic import TokenShards
-from repro.train.optimizer import sgd_init, sgd_update
+from repro.train.optimizer import resolve_optimizer
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=10)
 ap.add_argument("--seq", type=int, default=64)
 ap.add_argument("--batch", type=int, default=4)
 ap.add_argument("--cut-units", type=int, default=1)
+ap.add_argument("--optimizer", choices=("sgd", "adamw"), default="sgd",
+                help="pluggable optimizer; adamw uses the LM lr schedule")
+ap.add_argument("--lr", type=float, default=5e-3)
 ap.add_argument("--full", action="store_true",
                 help="use the real smollm-360m config (slow on CPU)")
 args = ap.parse_args()
@@ -46,12 +50,13 @@ print(f"pass allocation: E={rep.allocation.e_total:.4g} J "
 pa, pb = adapter.init(jax.random.key(0))
 step = make_sl_step(adapter)
 shards = TokenShards(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch)
-oa, ob = sgd_init(pa), sgd_init(pb)
+opt = resolve_optimizer(args.optimizer, lr=args.lr)
+state = SLTrainState.create(pa, pb, opt)
 batch0 = jax.tree.map(jnp.asarray, shards.batch_at(0, 0))
 for i in range(args.steps):
-    res = step(pa, pb, batch0)          # memorize one batch: loss must fall
-    pa, oa, _ = sgd_update(res.grads_a, oa, pa, lr=5e-3)
-    pb, ob, _ = sgd_update(res.grads_b, ob, pb, lr=5e-3)
+    # memorize one batch: loss must fall
+    res = step(state.params_a, state.params_b, batch0)
+    state = state.apply_updates(res.grads_a, res.grads_b, opt)
     print(f"  step {i}: loss {float(res.loss):.4f} "
           f"boundary {res.dtx_bits_down/8/1024:.0f} KiB/way")
-print("done (loss should be decreasing).")
+print(f"done ({opt.name}: loss should be decreasing).")

@@ -38,16 +38,18 @@ print(f"  vs direct download: {rep_dd.allocation.e_total:.4g} J "
 
 # 3. three real SL steps on the satellite's local shard
 print("\n== split-learning steps (satellite encoder / ground decoder) ==")
+from repro.core.train_state import SLTrainState
+from repro.train.optimizer import sgd
+
 pa, pb = adapter.init(jax.random.key(0))
 step = make_sl_step(adapter, quantize_boundary=True)   # int8 boundary
 shards = ImageryShards(img=64, batch=8)
-from repro.train.optimizer import sgd_init, sgd_update
-oa, ob = sgd_init(pa), sgd_init(pb)
+opt = sgd(lr=1e-2)
+state = SLTrainState.create(pa, pb, opt)
 for i in range(3):
     batch = jax.tree.map(jnp.asarray, shards.batch_at(0, i))
-    res = step(pa, pb, batch)
-    pa, oa, _ = sgd_update(res.grads_a, oa, pa, lr=1e-2)
-    pb, ob, _ = sgd_update(res.grads_b, ob, pb, lr=1e-2)
+    res = step(state.params_a, state.params_b, batch)
+    state = state.apply_updates(res.grads_a, res.grads_b, opt)
     print(f"  step {i}: loss {float(res.loss):.4f}, boundary "
           f"{res.dtx_bits_down / 8 / 1024:.1f} KiB (int8) each way")
 print("done.")

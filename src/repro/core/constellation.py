@@ -1,17 +1,31 @@
 """The orbital-ring scheduler: cyclical SL training across N satellites.
 
-Implements the paper's time-window protocol end to end:
+Implements the paper's time-window protocol end to end, planned at
+*revolution* granularity:
+
+  revolution r: the ring's N upcoming passes are pre-solved as ONE
+    batched problem-(13) instance set (core/mission.RevolutionPlanner
+    -> resource_opt.solve_with_shedding_batch): per-satellite budgets
+    and measured boundary payloads enter as batch rows, infeasible rows
+    shed their batch fraction through the same vectorized bisection.
+    The plan is cached; it is invalidated only by a membership change
+    (join/leave/failure re-shapes the ring) or a boundary-shape change
+    (batch shape / handoff payload alters the (13) coefficients), so a
+    steady-state revolution costs zero solves.
 
   pass k: satellite s = ring[k mod N] is visible for T_pass seconds.
-    1. resource allocation: solve problem (13) for this pass's split
-       costs (exact dual bisection, core/resource_opt); if infeasible,
-       shed batch fraction (straggler mitigation).  The boundary payload
-       is measured shape-only (sl_step.boundary_bits), no probe step.
+    1. resource allocation: consume this pass's pre-solved planner
+       entry (exact dual bisection, vectorized across the revolution);
+       shedding is already folded in.  The boundary payload is measured
+       shape-only (sl_step.boundary_bits), no probe step.
     2. run all allocated SL train steps (core/sl_step.make_sl_pass) on
        the satellite's local non-IID shard in ONE jitted lax.scan —
-       params and optimizer state ride the scan carry with donated
-       buffers, so a pass costs one dispatch regardless of step count
-       (the old engine paid k Python dispatches, hard-capped at 16).
+       the SLTrainState (params of both segments + optimizer states +
+       step counter, core/train_state) rides the scan carry with
+       donated buffers, so a pass costs one dispatch regardless of step
+       count.  The optimizer is pluggable per ConstellationConfig
+       (.optimizer = "sgd" | "adamw" | Optimizer instance), which is
+       what lets the LM split-training track run through this same loop.
     3. account energy per eq. (11) with the *measured* boundary payloads.
     4. hand segment A to the next satellite over the ISL — implemented
        as an integrity-checked checkpoint (ckpt.save_handoff), so the
@@ -24,14 +38,19 @@ skip" plus the 1000-node hardening):
   * random satellite failure => ring skips it; the successor restores
     the last handoff checkpoint (no training lost beyond one pass).
   * elastic membership: join/leave events re-size the ring between
-    passes (T_pass is per-satellite and unchanged; d_ISL shifts with N).
+    passes (T_pass is per-satellite and unchanged; d_ISL shifts with N)
+    and invalidate the cached revolution plan.
+
+Migration note: ``sim.params_a`` / ``sim.opt_a`` etc. remain as
+read/write views for one release; the canonical state is
+``sim.state`` (an :class:`~repro.core.train_state.SLTrainState`).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -39,10 +58,12 @@ import numpy as np
 
 from repro.core import resource_opt
 from repro.core.energy import PassBudget, SplitCosts
+from repro.core.mission import RevolutionPlanner
 from repro.core.orbits import OrbitalPlane
 from repro.core.sl_step import (SplitAdapter, make_boundary_meter,
                                 make_sl_pass)
-from repro.train.optimizer import SGDState, sgd_init
+from repro.core.train_state import SLTrainState
+from repro.train.optimizer import Optimizer, resolve_optimizer
 from repro.utils.treeutil import tree_bytes
 
 
@@ -77,6 +98,11 @@ class ConstellationConfig:
     items_per_pass: float = 400.0        # Table I: images per satellite pass
     batch_size: int = 8
     lr: float = 1e-2
+    # "sgd" | "adamw" | an Optimizer instance (train/optimizer.py); a
+    # name is resolved with lr=cfg.lr, so the AdamW lr schedule warms up
+    # to cfg.lr.  This is the LM-track hook: the same constellation loop
+    # trains an lm_adapter split with AdamW.
+    optimizer: Union[str, Optimizer] = "sgd"
     quantize_boundary: bool = False
     battery_j: float = 5_000.0
     recharge_w: float = 20.0             # solar recharge between passes
@@ -101,20 +127,23 @@ class ConstellationSim:
 
     def __init__(self, adapter: SplitAdapter, budget: PassBudget,
                  data_for_sat: Callable[[int, int], Dict],
-                 cfg: ConstellationConfig = ConstellationConfig()):
+                 cfg: Optional[ConstellationConfig] = None):
+        # default built per-instance: a shared ConstellationConfig() default
+        # would alias its mutable join_events/leave_events dicts across sims
+        cfg = ConstellationConfig() if cfg is None else cfg
         self.adapter = adapter
         self.budget = budget
         self.cfg = cfg
         self.data_for_sat = data_for_sat
         self.rng = np.random.default_rng(cfg.seed)
 
+        self.optimizer = resolve_optimizer(cfg.optimizer, lr=cfg.lr)
         pa, pb = adapter.init(jax.random.key(cfg.seed))
-        self.params_a, self.params_b = pa, pb
-        self.opt_a: SGDState = sgd_init(pa)
-        self.opt_b: SGDState = sgd_init(pb)
+        self.state = SLTrainState.create(pa, pb, self.optimizer)
         self.sl_pass = make_sl_pass(adapter,
                                     quantize_boundary=cfg.quantize_boundary,
-                                    lr=cfg.lr)
+                                    optimizer=self.optimizer)
+        self.planner = RevolutionPlanner()
 
         n = budget.plane.n_sats
         self.sats: List[SatelliteState] = [
@@ -123,6 +152,46 @@ class ConstellationSim:
         self._batch_idx = 0
         self._boundary_bits = make_boundary_meter(
             adapter, quantize_boundary=cfg.quantize_boundary)
+        # last measured costs per satellite: the planner batch carries one
+        # instance per ring member, so a sat with a different boundary
+        # payload changes only ITS row (one replan when first observed),
+        # not a cache miss on every pass of a heterogeneous ring
+        self._sat_costs: Dict[int, SplitCosts] = {}
+
+    # ---------------------------------------------- legacy 4-tuple views
+    # (deprecation shims for one release: the canonical state is
+    # ``self.state``; these read/write through to it.)
+    @property
+    def params_a(self):
+        return self.state.params_a
+
+    @params_a.setter
+    def params_a(self, v):
+        self.state = self.state.replace(params_a=v)
+
+    @property
+    def params_b(self):
+        return self.state.params_b
+
+    @params_b.setter
+    def params_b(self, v):
+        self.state = self.state.replace(params_b=v)
+
+    @property
+    def opt_a(self):
+        return self.state.opt_a
+
+    @opt_a.setter
+    def opt_a(self, v):
+        self.state = self.state.replace(opt_a=v)
+
+    @property
+    def opt_b(self):
+        return self.state.opt_b
+
+    @opt_b.setter
+    def opt_b(self, v):
+        self.state = self.state.replace(opt_b=v)
 
     # ------------------------------------------------------------- internals
     def _ring(self) -> List[SatelliteState]:
@@ -134,8 +203,17 @@ class ConstellationSim:
         return dataclasses.replace(base, dtx_bits=dtx_bits_per_item,
                                    d_isl_bits=d_isl)
 
-    def _solve_pass(self, costs: SplitCosts):
-        return resource_opt.solve_with_shedding(self.budget, costs)
+    def _solve_pass(self, sat_id: int, costs: SplitCosts):
+        """This pass's allocation, consumed from the revolution plan
+        (one batched solve per plan epoch, see core/mission).  Satellites
+        not yet measured default to this pass's costs, so a homogeneous
+        ring plans once and a heterogeneous one replans at most once per
+        newly-observed payload shape."""
+        self._sat_costs[sat_id] = costs
+        ring_ids = tuple(s.sat_id for s in self._ring())
+        ring_costs = [self._sat_costs.get(s, costs) for s in ring_ids]
+        return self.planner.entry_for(sat_id, ring_ids, self.budget,
+                                      ring_costs).shed
 
     # ------------------------------------------------------------------ run
     def run(self) -> List[PassRecord]:
@@ -189,7 +267,7 @@ class ConstellationSim:
         dtx_per_item = self._boundary_bits(batch) / n_in_batch
 
         costs = self._measured_costs(dtx_per_item)
-        shed = self._solve_pass(costs)
+        shed = self._solve_pass(sat.sat_id, costs)
         alloc = shed.report.allocation
         n_items = shed.n_items_kept
         n_steps = max(1, int(round(n_items / n_in_batch)))
@@ -206,10 +284,8 @@ class ConstellationSim:
                        self.data_for_sat(sat.sat_id,
                                          self._batch_idx + start + j)
                        for j in range(m)]
-            res = self.sl_pass(self.params_a, self.params_b,
-                               self.opt_a, self.opt_b, batches)
-            self.params_a, self.params_b = res.params_a, res.params_b
-            self.opt_a, self.opt_b = res.opt_a, res.opt_b
+            res = self.sl_pass(self.state, batches)
+            self.state = res.state
             loss_parts.append(np.asarray(res.losses, dtype=np.float64))
             start += m
         losses = np.concatenate(loss_parts)

@@ -441,16 +441,8 @@ def solve_batch(budgets: Union[PassBudget, Sequence[PassBudget]],
     so the cost is O(iterations) vector ops total, not O(B · iterations)
     Python arithmetic.
     """
-    blist = [budgets] if isinstance(budgets, PassBudget) else list(budgets)
-    clist = [costs] if isinstance(costs, SplitCosts) else list(costs)
-    B = max(len(blist), len(clist))
-    if len(blist) == 1:
-        blist = blist * B
-    if len(clist) == 1:
-        clist = clist * B
-    if len(blist) != B or len(clist) != B:
-        raise ValueError(f"length mismatch: {len(blist)} budgets vs "
-                         f"{len(clist)} costs")
+    blist, clist = _broadcast_instances(budgets, costs)
+    B = len(blist)
 
     # ---- gather per-instance coefficients (cheap Python setup loop) ----
     k = np.zeros((B, 2))          # [sat_proc, gs_proc]
@@ -587,6 +579,96 @@ class SheddingReport:
     n_items_kept: float
 
 
+def _broadcast_instances(budgets, costs):
+    """(budget|seq, costs|seq) -> equal-length lists (shared helper)."""
+    blist = [budgets] if isinstance(budgets, PassBudget) else list(budgets)
+    clist = [costs] if isinstance(costs, SplitCosts) else list(costs)
+    B = max(len(blist), len(clist))
+    if len(blist) == 1:
+        blist = blist * B
+    if len(clist) == 1:
+        clist = clist * B
+    if len(blist) != B or len(clist) != B:
+        raise ValueError(f"length mismatch: {len(blist)} budgets vs "
+                         f"{len(clist)} costs")
+    return blist, clist
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSheddingReport:
+    """Vectorized shedding solution for B instances.
+
+    ``report`` is the :class:`BatchSolveReport` solved at the *kept*
+    item counts; ``at(i)`` materializes the scalar
+    :class:`SheddingReport` for one instance.
+    """
+
+    report: BatchSolveReport
+    kept_fraction: np.ndarray      # (B,)
+    n_items_kept: np.ndarray       # (B,)
+
+    @property
+    def n(self) -> int:
+        return len(self.kept_fraction)
+
+    def at(self, i: int) -> SheddingReport:
+        return SheddingReport(self.report.report_at(i),
+                              float(self.kept_fraction[i]),
+                              float(self.n_items_kept[i]))
+
+
+def solve_with_shedding_batch(
+        budgets: Union[PassBudget, Sequence[PassBudget]],
+        costs: Union[SplitCosts, Sequence[SplitCosts]],
+        min_fraction: float = 0.05,
+        tol: float = 1e-4) -> BatchSheddingReport:
+    """Vectorized :func:`solve_with_shedding` over B instances.
+
+    Every phase's t_min scales linearly with n_items while the time
+    budget does not depend on it, so feasibility at fraction f reduces
+    to ``f · Σ t_min ≤ T_budget`` — the kept-fraction bisection runs in
+    lockstep across all instances as array arithmetic (no inner solves),
+    then ONE :func:`solve_batch` call allocates every instance at its
+    kept item count.  This is the planner-scale path: a whole ring
+    revolution's shedding decisions cost one batched solve.
+    """
+    blist, clist = _broadcast_instances(budgets, costs)
+    B = len(blist)
+
+    t_min_sum = np.zeros(B)
+    t_budget = np.zeros(B)
+    for i, (b, c) in enumerate(zip(blist, clist)):
+        cf = _phase_coeffs(b, c)
+        t_min_sum[i] = cf.t_min_sat + cf.t_min_down + cf.t_min_gs \
+            + cf.t_min_up
+        t_budget[i] = b.time_budget_s(c)
+
+    # No live phase => solve() reports feasible regardless of budget.
+    no_phase = t_min_sum == 0.0
+    feas_full = no_phase | ((t_budget > 0.0) & (t_min_sum <= t_budget))
+    feas_floor = (t_budget > 0.0) & (min_fraction * t_min_sum <= t_budget)
+
+    frac = np.ones(B)
+    frac = np.where(feas_full, 1.0, np.where(feas_floor, frac,
+                                             min_fraction))
+    active = ~feas_full & feas_floor
+    lo = np.full(B, min_fraction)
+    hi = np.ones(B)
+    while np.any(active & (hi - lo > tol)):
+        mid = 0.5 * (lo + hi)
+        ok = mid * t_min_sum <= t_budget
+        lo = np.where(active & ok, mid, lo)
+        hi = np.where(active & ~ok, mid, hi)
+    frac = np.where(active, lo, frac)
+
+    scaled = [b if f == 1.0 else dataclasses.replace(b,
+                                                     n_items=b.n_items * f)
+              for b, f in zip(blist, frac)]
+    rep = solve_batch(scaled, clist)
+    n_kept = np.array([b.n_items for b in blist]) * frac
+    return BatchSheddingReport(rep, frac, n_kept)
+
+
 def solve_with_shedding(budget: PassBudget, costs: SplitCosts,
                         min_fraction: float = 0.05,
                         tol: float = 1e-4) -> SheddingReport:
@@ -596,26 +678,11 @@ def solve_with_shedding(budget: PassBudget, costs: SplitCosts,
     monotone in the kept fraction — bisect on it.  This is the per-pass
     deadline acting as straggler mitigation (DESIGN.md §2): a slow or
     energy-poor satellite processes a prefix of its batch rather than
-    stalling the ring.
+    stalling the ring.  Thin wrapper over a 1-instance
+    :func:`solve_with_shedding_batch`.
     """
-    rep = solve(budget, costs)
-    if rep.allocation.feasible:
-        return SheddingReport(rep, 1.0, budget.n_items)
-
-    lo, hi = min_fraction, 1.0
-    if not _feasible_at(budget, costs, lo):
-        rep = solve(dataclasses.replace(budget, n_items=budget.n_items * lo), costs)
-        return SheddingReport(rep, lo, budget.n_items * lo)
-
-    while hi - lo > tol:
-        mid = 0.5 * (lo + hi)
-        if _feasible_at(budget, costs, mid):
-            lo = mid
-        else:
-            hi = mid
-    frac = lo
-    rep = solve(dataclasses.replace(budget, n_items=budget.n_items * frac), costs)
-    return SheddingReport(rep, frac, budget.n_items * frac)
+    return solve_with_shedding_batch(budget, costs, min_fraction=min_fraction,
+                                     tol=tol).at(0)
 
 
 def _feasible_at(budget: PassBudget, costs: SplitCosts, frac: float) -> bool:
@@ -682,10 +749,11 @@ def best_split_batch(budget: PassBudget,
     i = int(np.argmin(e))
     if np.isfinite(e[i]):
         return cands[i], rep.report_at(i)
-    # nothing feasible: fall back to max shedding on the least-bad plan
-    sheds = [(c, solve_with_shedding(budget, c)) for c in cands]
-    c, s = max(sheds, key=lambda cs: cs[1].kept_fraction)
-    return c, s.report
+    # nothing feasible: fall back to max shedding on the least-bad plan —
+    # one vectorized kept-fraction bisection + solve across all cuts
+    shed = solve_with_shedding_batch(budget, cands)
+    j = int(np.argmax(shed.kept_fraction))
+    return cands[j], shed.at(j).report
 
 
 def best_split(budget: PassBudget,

@@ -22,16 +22,21 @@ Pass engine (the per-pass hot path)
 :func:`make_sl_step` runs ONE step per jitted call; a pass that the
 problem-(13) allocation budgets for k steps used to pay k Python
 dispatches plus k eager optimizer updates.  :func:`make_sl_pass` fuses
-the whole pass into a single jitted ``jax.lax.scan``: the (params_a,
-params_b, opt_a, opt_b) pytrees thread through the scan carry (buffers
-donated, so segment weights update in place across the pass), batches
-are stacked along the scan axis, and the per-step losses come back as
-one (k,) array.  Step counts are bucketed to the next power of two with
-a per-step validity mask — padded steps leave the carry untouched — so
+the whole pass into a single jitted ``jax.lax.scan``: one
+:class:`~repro.core.train_state.SLTrainState` (both segments' params +
+optimizer states + step counter) threads through the scan carry
+(buffers donated, so segment weights update in place across the pass;
+the input state is marked consumed), batches are stacked along the scan
+axis, and the per-step losses come back as one (k,) array.  The
+optimizer is pluggable (:class:`~repro.train.optimizer.Optimizer` —
+SGD or AdamW with its lr schedule) and updates inside the scan body.
+Step counts are bucketed to the next power of two with a per-step
+validity mask — padded steps leave the carry untouched — so
 recompilation is O(log k) over a constellation run instead of one
 compile per distinct allocation.  The scanned step applies exactly the
-same grads + SGD update as the scalar path, so k scanned steps match k
-sequential ``make_sl_step`` + ``sgd_update`` calls loss-for-loss.
+same grads + optimizer update as the scalar path, so k scanned SGD
+steps match k sequential ``make_sl_step`` + ``sgd_update`` calls
+loss-for-loss.
 """
 from __future__ import annotations
 
@@ -158,16 +163,34 @@ def make_boundary_meter(adapter: SplitAdapter,
 
 @dataclasses.dataclass
 class SLPassResult:
-    """One whole pass: k fused SL steps + SGD updates on both segments."""
+    """One whole pass: k fused SL steps + optimizer updates, as a state.
+
+    ``state`` is the :class:`~repro.core.train_state.SLTrainState` after
+    the pass; the ``params_a``/``params_b``/``opt_a``/``opt_b``
+    properties are a deprecation shim for the old 4-tuple API.
+    """
 
     losses: jnp.ndarray                 # (k,) per-step training loss
-    params_a: Any
-    params_b: Any
-    opt_a: Any
-    opt_b: Any
+    state: Any                          # SLTrainState after the pass
     n_steps: int
     dtx_bits_down: int                  # boundary payload per step (one way)
     dtx_bits_up: int
+
+    @property
+    def params_a(self):
+        return self.state.params_a
+
+    @property
+    def params_b(self):
+        return self.state.params_b
+
+    @property
+    def opt_a(self):
+        return self.state.opt_a
+
+    @property
+    def opt_b(self):
+        return self.state.opt_b
 
 
 def _next_pow2(k: int) -> int:
@@ -190,53 +213,77 @@ def _bucket_size(k: int) -> int:
 
 
 def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
-                 lr: float = 1e-2, grad_clip: float = 1.0,
+                 optimizer=None, lr: float = 1e-2, grad_clip: float = 1.0,
                  donate: bool = True, bucket: bool = True):
     """Returns a fused pass executor running k SL steps in one jitted call.
 
-    ``sl_pass(params_a, params_b, opt_a, opt_b, batches) -> SLPassResult``
+    ``sl_pass(state, batches) -> SLPassResult``
+
+    ``state`` is an :class:`~repro.core.train_state.SLTrainState`; it
+    rides the ``lax.scan`` carry and (with ``donate=True``) its buffers
+    are donated to the call, so a pass updates segment weights in place
+    instead of round-tripping k times through Python.  The input state
+    is marked *consumed* — chain ``result.state`` forward; reusing a
+    consumed state raises instead of crashing on freed buffers.
+
+    ``optimizer`` is an :class:`~repro.train.optimizer.Optimizer`, a
+    registered name (``"sgd"``/``"adamw"``), or None for SGD built from
+    the legacy ``lr``/``grad_clip`` kwargs.  Any optimizer whose state
+    is a pytree works — the update runs inside the scan body.
 
     ``batches`` is either a list of k per-step batch dicts (shapes may
     vary between steps — consecutive same-shape groups are scanned and
     chained) or one pytree whose leaves carry a leading scan axis of
-    length k.  The four state
-    pytrees ride the ``lax.scan`` carry and their buffers are donated to
-    the call, so a pass updates segment weights in place instead of
-    round-tripping k times through Python (callers must chain the
-    returned state forward — the input buffers are consumed).  With
-    ``bucket=True`` k is padded to a bucketed step count (powers of two
-    up to 16, then 1/8-octave granularity, see ``_bucket_size``) with
-    masked no-op steps — the carry passes through unchanged — keeping
-    recompiles rare at <=25% worst-case padded compute.
-    """
-    from repro.train.optimizer import sgd_update
+    length k.  With ``bucket=True`` k is padded to a bucketed step count
+    (powers of two up to 16, then 1/8-octave granularity, see
+    ``_bucket_size``) with masked no-op steps — the carry passes through
+    unchanged — keeping recompiles rare at <=25% worst-case padded
+    compute.
 
+    Deprecated: the old 4-tuple call
+    ``sl_pass(params_a, params_b, opt_a, opt_b, batches)`` still works
+    for one release (the states are wrapped into a fresh SLTrainState).
+    """
+    from repro.core.train_state import SLTrainState
+    from repro.train.optimizer import resolve_optimizer
+
+    opt = resolve_optimizer(optimizer, lr=lr, grad_clip=grad_clip)
     sl_grads = _make_sl_grads(adapter, quantize_boundary)
     measure_payload = make_boundary_meter(adapter, quantize_boundary)
 
-    def one_step(carry, xs):
-        pa, pb, oa, ob = carry
+    def one_step(state, xs):
         batch, valid = xs
-        loss, g_a, g_b, _ = sl_grads(pa, pb, batch)
-        pa2, oa2, _ = sgd_update(g_a, oa, pa, lr=lr, grad_clip=grad_clip)
-        pb2, ob2, _ = sgd_update(g_b, ob, pb, lr=lr, grad_clip=grad_clip)
+        loss, g_a, g_b, _ = sl_grads(state.params_a, state.params_b, batch)
+        new = state.apply_updates(g_a, g_b, opt)
+        # padded steps leave the whole carry (params, opt, step) untouched
+        state = jax.tree.map(lambda n_, o_: jnp.where(valid, n_, o_),
+                             new, state)
+        return state, jnp.where(valid, loss, jnp.nan)
 
-        def keep(new, old):
-            return jax.tree.map(lambda n_, o_: jnp.where(valid, n_, o_),
-                                new, old)
+    def scan_pass(state, batches, valid):
+        return jax.lax.scan(one_step, state, (batches, valid))
 
-        carry = (keep(pa2, pa), keep(pb2, pb), keep(oa2, oa), keep(ob2, ob))
-        return carry, jnp.where(valid, loss, jnp.nan)
+    jitted = jax.jit(scan_pass, donate_argnums=(0,) if donate else ())
 
-    def scan_pass(params_a, params_b, opt_a, opt_b, batches, valid):
-        return jax.lax.scan(one_step, (params_a, params_b, opt_a, opt_b),
-                            (batches, valid))
+    def _dedupe_buffers(state):
+        """Copy leaves that alias the same buffer (e.g. a tied LM
+        embedding shared between segments A and B): XLA rejects donating
+        one buffer twice, and the segments diverge after the first
+        update anyway."""
+        seen = set()
 
-    jitted = jax.jit(scan_pass,
-                     donate_argnums=(0, 1, 2, 3) if donate else ())
+        def uniq(x):
+            if id(x) in seen:
+                return jnp.copy(x)
+            seen.add(id(x))
+            return x
 
-    def run(params_a, params_b, opt_a, opt_b,
-            batches: Union[Sequence[Dict], Dict]) -> SLPassResult:
+        return jax.tree.map(uniq, state)
+
+    def run_state(state, batches: Union[Sequence[Dict], Dict]) -> SLPassResult:
+        # even a donate=False pass must reject a consumed state: its
+        # buffers may already be freed by the pass that consumed it
+        state._require_live("pass")
         if isinstance(batches, (list, tuple)):
             if not batches:
                 raise ValueError("a pass needs at least one batch")
@@ -246,21 +293,19 @@ def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
                 # consecutive same-shape groups, chaining the donated
                 # state between them.  Payload is reported for the first
                 # group's step shape.
-                state = (params_a, params_b, opt_a, opt_b)
                 results = []
                 i = 0
                 while i < len(batches):
                     j = i + 1
                     while j < len(batches) and keys[j] == keys[i]:
                         j += 1
-                    r = run(*state, list(batches[i:j]))
-                    state = (r.params_a, r.params_b, r.opt_a, r.opt_b)
+                    r = run_state(state, list(batches[i:j]))
+                    state = r.state
                     results.append(r)
                     i = j
                 return SLPassResult(
                     losses=jnp.concatenate([r.losses for r in results]),
-                    params_a=state[0], params_b=state[1],
-                    opt_a=state[2], opt_b=state[3], n_steps=len(batches),
+                    state=state, n_steps=len(batches),
                     dtx_bits_down=results[0].dtx_bits_down,
                     dtx_bits_up=results[0].dtx_bits_up)
             batches = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
@@ -276,11 +321,29 @@ def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
                 lambda x: jnp.concatenate(
                     [x, jnp.repeat(x[-1:], kb - k, axis=0)]), batches)
         valid = jnp.arange(kb) < k
-        (pa, pb, oa, ob), losses = jitted(
-            params_a, params_b, opt_a, opt_b, batches, valid)
-        return SLPassResult(losses=losses[:k], params_a=pa, params_b=pb,
-                            opt_a=oa, opt_b=ob, n_steps=k,
+        call_state = _dedupe_buffers(state) if donate else state
+        new_state, losses = jitted(call_state, batches, valid)
+        if donate:
+            state.mark_consumed()
+        return SLPassResult(losses=losses[:k], state=new_state, n_steps=k,
                             dtx_bits_down=payload, dtx_bits_up=payload)
+
+    def run(*args) -> SLPassResult:
+        if len(args) == 2:
+            state, batches = args
+            if not isinstance(state, SLTrainState):
+                raise TypeError("sl_pass(state, batches) expects an "
+                                f"SLTrainState, got {type(state).__name__}")
+            return run_state(state, batches)
+        if len(args) == 5:
+            # deprecated 4-tuple API, kept as a shim for one release
+            pa, pb, oa, ob, batches = args
+            state = SLTrainState(pa, pb, oa, ob,
+                                 step=jnp.zeros((), jnp.int32))
+            return run_state(state, batches)
+        raise TypeError("sl_pass takes (state, batches) or the deprecated "
+                        f"(params_a, params_b, opt_a, opt_b, batches); got "
+                        f"{len(args)} arguments")
 
     return run
 

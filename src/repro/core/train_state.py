@@ -1,0 +1,111 @@
+"""`SLTrainState`: the one-object train state of the split-learning loop.
+
+The pass engine used to thread FOUR loose pytrees — ``params_a``,
+``params_b`` and both optimizer states — through every call, which made
+the donated-buffer contract easy to violate (pass the same ``params_a``
+into two fused passes and jax dies on a deleted buffer, or silently
+trains from stale weights with ``donate=False``).  ``SLTrainState``
+bundles the two segment parameter trees, both optimizer states and a
+step counter into a single registered pytree with explicit semantics:
+
+* ``create(params_a, params_b, optimizer)`` — build a fresh state with
+  optimizer state initialized for both segments;
+* ``apply_updates(grads_a, grads_b, optimizer)`` — one optimizer step
+  on both segments (+1 on the step counter), pure and traceable, so it
+  works inside ``lax.scan`` bodies and eager loops alike;
+* ``replace(**kw)`` — functional field update (a live copy);
+* ``donate()`` / consumption tracking — a state handed to a fused pass
+  with buffer donation is *consumed*: its arrays may be freed by XLA.
+  The engine marks the input state consumed and every subsequent
+  ``apply_updates``/``replace``/``donate``/re-pass on it raises
+  ``ValueError`` instead of tripping a deleted-buffer crash (or worse,
+  silently reusing stale memory).
+
+The state flattens to ``(params_a, params_b, opt_a, opt_b, step)``, so
+it rides a scan carry, crosses ``jax.jit`` boundaries, and donates as
+one argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SLTrainState:
+    """Split-learning train state: both segments + optimizer + step."""
+
+    params_a: Any                      # satellite segment weights
+    params_b: Any                      # ground segment weights
+    opt_a: Any                         # optimizer state for segment A
+    opt_b: Any                         # optimizer state for segment B
+    step: Any = 0                      # scalar int32 step counter
+
+    _consumed: bool = dataclasses.field(default=False, init=False,
+                                        repr=False, compare=False)
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return ((self.params_a, self.params_b, self.opt_a, self.opt_b,
+                 self.step), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def create(cls, params_a, params_b, optimizer) -> "SLTrainState":
+        """Fresh state with ``optimizer.init`` run on both segments."""
+        return cls(params_a=params_a, params_b=params_b,
+                   opt_a=optimizer.init(params_a),
+                   opt_b=optimizer.init(params_b),
+                   step=jnp.zeros((), jnp.int32))
+
+    # --------------------------------------------------------- semantics
+    @property
+    def consumed(self) -> bool:
+        return self._consumed
+
+    def _require_live(self, op: str) -> None:
+        if self._consumed:
+            raise ValueError(
+                f"SLTrainState.{op}: this state was consumed (its buffers "
+                "were donated to a fused pass and may be freed); use the "
+                "state returned by that pass instead")
+
+    def donate(self) -> "SLTrainState":
+        """Hand the buffers to a donating call: marks *this* reference
+        consumed and returns a live alias (sharing the same arrays) for
+        the one donating call site.  Guards against the classic footgun
+        of reusing donated params after the pass."""
+        self._require_live("donate")
+        alias = dataclasses.replace(self)
+        self._consumed = True
+        return alias
+
+    def mark_consumed(self) -> None:
+        """Engine hook: flag the state after its buffers were donated."""
+        self._consumed = True
+
+    def replace(self, **kw) -> "SLTrainState":
+        """Functional update; the returned state is live."""
+        self._require_live("replace")
+        return dataclasses.replace(self, **kw)
+
+    def apply_updates(self, grads_a, grads_b, optimizer) -> "SLTrainState":
+        """One optimizer step on both segments; returns the new state."""
+        self._require_live("apply_updates")
+        pa, oa, _ = optimizer.update(grads_a, self.opt_a, self.params_a)
+        pb, ob, _ = optimizer.update(grads_b, self.opt_b, self.params_b)
+        return SLTrainState(params_a=pa, params_b=pb, opt_a=oa, opt_b=ob,
+                            step=self.step + 1)
+
+    def as_tuple(self) -> Tuple[Any, Any, Any, Any]:
+        """Legacy 4-tuple view (old ``make_sl_pass`` argument order)."""
+        return self.params_a, self.params_b, self.opt_a, self.opt_b

@@ -1,5 +1,16 @@
 """Optimizers from scratch (no optax): AdamW and SGD-momentum.
 
+Two layers:
+
+* raw functions (``sgd_init``/``sgd_update``, ``adamw_init``/
+  ``adamw_update``) — the arithmetic, kept exactly as before;
+* the :class:`Optimizer` protocol — a uniform ``(init, update)`` pair
+  the SL pass engine and the constellation scheduler program against,
+  so SGD and AdamW (with its warmup+cosine lr schedule) are
+  interchangeable through ``ConstellationConfig.optimizer``.  Both
+  states are NamedTuples of pytrees, so either rides a ``lax.scan``
+  carry (the fused pass engine) unchanged.
+
 Optimizer state mirrors the parameter pytree; ``zero_specs`` produces
 PartitionSpecs that additionally shard every state tensor (and the fp32
 master copy) along the ZeRO axis (rules.zero, default "data") on its
@@ -9,7 +20,7 @@ on top of whatever tensor-parallel sharding the parameter already has.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -114,6 +125,77 @@ def sgd_update(grads, state: SGDState, params, *, lr=1e-2, beta=0.9,
         lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
         params, mom)
     return new_params, SGDState(state.step + 1, mom), {"grad_norm": gn}
+
+
+# --------------------------------------------------------------------------
+# The Optimizer protocol: a uniform (init, update) pair.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """Pluggable optimizer: ``init(params) -> state`` plus
+    ``update(grads, state, params) -> (new_params, new_state, metrics)``.
+
+    All hyperparameters (lr, schedules, clipping) are closed over at
+    construction, so the pair is scan-carry compatible: the state is a
+    pytree and ``update`` is a pure traced function of (grads, state,
+    params) only.
+    """
+
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any, Dict[str, Any]]]
+
+
+def sgd(lr: float = 1e-2, beta: float = 0.9,
+        grad_clip: float = 1.0) -> Optimizer:
+    """SGD-momentum as an :class:`Optimizer` (the paper's online loop)."""
+
+    def update(grads, state, params):
+        return sgd_update(grads, state, params, lr=lr, beta=beta,
+                          grad_clip=grad_clip)
+
+    return Optimizer("sgd", sgd_init, update)
+
+
+def adamw(cfg: Optional[AdamWConfig] = None, **overrides) -> Optimizer:
+    """AdamW (incl. the warmup+cosine lr schedule) as an Optimizer.
+
+    ``overrides`` patch individual :class:`AdamWConfig` fields, e.g.
+    ``adamw(lr=3e-4, warmup_steps=50)``.
+    """
+    cfg = dataclasses.replace(cfg or AdamWConfig(), **overrides)
+
+    def update(grads, state, params):
+        return adamw_update(cfg, grads, state, params)
+
+    return Optimizer("adamw", adamw_init, update)
+
+
+_OPTIMIZER_FACTORIES: Dict[str, Callable[..., Optimizer]] = {
+    "sgd": sgd,
+    "adamw": adamw,
+}
+
+
+def resolve_optimizer(spec: Union[str, Optimizer, None],
+                      **defaults) -> Optimizer:
+    """Turn ``"sgd"`` / ``"adamw"`` / an Optimizer instance into one.
+
+    ``defaults`` (e.g. ``lr=...``, ``grad_clip=...``) feed the factory
+    when ``spec`` is a name; an explicit Optimizer instance wins as-is.
+    """
+    if spec is None:
+        spec = "sgd"
+    if isinstance(spec, Optimizer):
+        return spec
+    try:
+        factory = _OPTIMIZER_FACTORIES[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown optimizer {spec!r}; expected one of "
+            f"{sorted(_OPTIMIZER_FACTORIES)} or an Optimizer instance")
+    return factory(**defaults)
 
 
 # --------------------------------------------------------------------------
