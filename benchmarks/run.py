@@ -1,17 +1,25 @@
 """Benchmark entry point: one block per paper table/figure + the
 beyond-paper rows + micro-benchmarks of the SL step, the batched pass
 engine (before/after rows for the vectorized problem-(13) solver and the
-scan-fused pass executor), and each kernel's jnp path.
+scan-fused pass executor), the solver backends (NumPy lockstep vs the
+jit+vmap JAX engine), the on-device revolution sweep, and each kernel's
+jnp path.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick]
 
-Alongside the stdout tables the run emits machine-readable JSON to
+``--quick`` is the CI smoke mode (scripts/check.sh): small solver grids,
+no 1000-sat sweep, paper tables skipped, results written to
+``results/bench_quick.json`` only — fast enough to catch a regression in
+the jitted solver without a full sweep.
+
+Alongside the stdout tables a full run emits machine-readable JSON to
 ``results/BENCH_<rev>.json`` (``<rev>`` = current git short hash, "dev"
 outside a checkout) so the perf trajectory is tracked across PRs, plus
 ``results/bench.json`` as a stable latest-run alias.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import glob
 import json
@@ -160,6 +168,150 @@ def engine_benchmarks():
     return out
 
 
+def solver_backend_benchmarks(quick: bool = False):
+    """Backend rows for the problem-(13) solver (the device tentpole):
+
+    * ``solve13_numpy_<B>``: the lockstep NumPy ``solve_batch`` over a
+      >=4096-instance (cut x n_items) grid (full call incl. the host
+      coefficient gather, i.e. what any consumer pays);
+    * ``solve13_jax_<B>``: ``solve_batch_jax`` post-compile, same grid,
+      same full-call accounting;
+    * ``solve13_jax_device_<B>``: the device-resident core
+      (``solve_coeffs`` on pre-staged CoeffArrays) — the number a
+      zero-host-transfer pipeline (sweep_revolutions) actually sees.
+    """
+    import jax
+    from repro.core import resource_opt, resource_opt_jax
+    from repro.core.energy import PassBudget
+    from repro.core.splitting import resnet18_plan
+
+    print("== solver-backend benchmarks (numpy vs jit+vmap jax) ==")
+    print("name,us_per_call,derived")
+    out = {}
+    if not resource_opt_jax.available():           # pragma: no cover
+        print("solver_backend,skipped,jax-unavailable")
+        return out
+
+    plan = resnet18_plan(img=224, n_classes=1000)
+    cuts = plan.enumerate_cuts()
+    n_variants = 36 if quick else 512
+    budgets, costs = [], []
+    for j in range(n_variants):
+        b = PassBudget(n_items=50.0 * (j + 1))
+        for c in cuts:
+            budgets.append(b)
+            costs.append(c)
+    n_inst = len(costs)
+    if not quick:
+        assert n_inst >= 4096, n_inst
+
+    def np_call():
+        return resource_opt.solve_batch(budgets, costs, backend="numpy")
+
+    def jax_call():
+        return resource_opt.solve_batch(budgets, costs, backend="jax")
+
+    us_np, rep_np = _timeit(np_call, n=3, warmup=1)
+    us_jax, rep_jax = _timeit(jax_call, n=3, warmup=1)   # warmup compiles
+
+    blist, clist = resource_opt._broadcast_instances(budgets, costs)
+    with resource_opt_jax.x64_scope():
+        coeffs = resource_opt_jax._coeffs_from_instances(blist, clist)
+
+        def device_call():
+            return jax.block_until_ready(
+                resource_opt_jax.solve_coeffs(coeffs).phase_times)
+
+        us_dev, _ = _timeit(device_call, n=3, warmup=1)
+
+    import numpy as np
+    agree = bool(np.allclose(rep_np.e_total, rep_jax.e_total, rtol=1e-8))
+    out["solve13_numpy"] = dict(us=us_np, n_instances=n_inst)
+    out["solve13_jax"] = dict(us=us_jax, n_instances=n_inst,
+                              speedup_vs_numpy=us_np / us_jax,
+                              parity_vs_numpy=agree)
+    out["solve13_jax_device"] = dict(us=us_dev, n_instances=n_inst,
+                                     speedup_vs_numpy=us_np / us_dev)
+    print(f"solve13_numpy_{n_inst},{us_np:.0f},host-lockstep")
+    print(f"solve13_jax_{n_inst},{us_jax:.0f},"
+          f"{us_np / us_jax:.2f}x-vs-numpy,parity={agree}")
+    print(f"solve13_jax_device_{n_inst},{us_dev:.0f},"
+          f"{us_np / us_dev:.2f}x-vs-numpy-device-resident")
+    return out
+
+
+def sweep_benchmarks(quick: bool = False):
+    """The on-device revolution sweep: a (ring x cut x budget) grid —
+    including the 1000-sat ring in full mode — planned (coefficients,
+    shedding, dual bisection) in ONE jitted call with zero host
+    transfers, then chained into a fused SL pass via a device-side step
+    count (``steps_for`` -> ``n_valid``) without ever syncing the plan.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import resource_opt_jax
+    from repro.core.mission import sweep_revolutions
+    from repro.core.sl_step import autoencoder_adapter, make_sl_pass
+    from repro.core.splitting import resnet18_plan
+    from repro.core.train_state import SLTrainState
+    from repro.data.synthetic import ImageryShards
+    from repro.train.optimizer import sgd
+
+    print("== revolution-sweep benchmarks (on-device planning) ==")
+    print("name,us_per_call,derived")
+    out = {}
+    if not resource_opt_jax.available():           # pragma: no cover
+        print("sweep_revolutions,skipped,jax-unavailable")
+        return out
+
+    cuts = resnet18_plan(img=224, n_classes=1000).enumerate_cuts()
+    ring_sizes = [25, 100] if quick else [25, 100, 1000]
+    n_items = [100.0 * (j + 1) for j in range(4 if quick else 32)]
+
+    def sweep_call():
+        sw = sweep_revolutions(ring_sizes, cuts, n_items)
+        jax.block_until_ready(sw.e_pass)
+        return sw
+
+    us_sweep, sw = _timeit(sweep_call, n=3, warmup=1)
+    r, c, b = sw.shape
+    n_cells = r * c * b
+    host = sw.to_host()
+    out["sweep_revolutions"] = dict(
+        us=us_sweep, ring_sizes=list(map(int, ring_sizes)),
+        n_cells=n_cells, us_per_cell=us_sweep / n_cells,
+        feasible_cells=int(host["feasible"].sum()),
+        max_ring=int(max(ring_sizes)))
+    print(f"sweep_revolutions_{n_cells},{us_sweep:.0f},"
+          f"rings={ring_sizes}-x-{c}cuts-x-{b}budgets,"
+          f"{us_sweep / n_cells:.1f}us/cell")
+
+    # plan -> train with no host sync: the planned step count reaches the
+    # fused pass as a device scalar (n_valid); time the chained call.
+    ad = autoencoder_adapter(cut=5, img=32)
+    shards = ImageryShards(img=32, batch=4)
+    batches = [jax.tree.map(jnp.asarray, shards.batch_at(0, i))
+               for i in range(8)]
+    opt = sgd(lr=1e-2)
+    sl_pass = make_sl_pass(ad, optimizer=opt, donate=False)
+    plan_sweep = sweep_revolutions([25], [ad.costs()], [24.0])
+    n_valid = plan_sweep.steps_for(4)[0, 0, 0]     # 6 of 8 steps, on device
+
+    def planned_pass():
+        r = sl_pass(SLTrainState.create(*ad.init(jax.random.key(0)), opt),
+                    batches, n_valid=n_valid)
+        return jax.block_until_ready(r.losses)
+
+    us_pass, losses = _timeit(planned_pass, n=3, warmup=1)
+    n_ran = int(np.isfinite(np.asarray(losses)).sum())
+    out["sweep_planned_pass"] = dict(us=us_pass, steps_planned=n_ran,
+                                     steps_offered=len(batches))
+    print(f"sweep_planned_pass,{us_pass:.0f},"
+          f"{n_ran}/{len(batches)}-steps-device-masked")
+    return out
+
+
 def micro_benchmarks():
     """us/call for the SL step + each kernel's jnp path (CPU; the numbers
     are for regression tracking, not TPU performance claims)."""
@@ -285,19 +437,33 @@ def trend_report(results_dir: str, current: dict, rev: str,
     return report
 
 
-def main() -> None:
-    from benchmarks import paper_tables
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: small solver grids, no 1000-sat "
+                         "sweep, paper tables skipped, no BENCH_<rev> "
+                         "emission (results/bench_quick.json only)")
+    args = ap.parse_args(argv)
 
     t0 = time.time()
-    results = paper_tables.run_all()
+    if args.quick:
+        results = {}
+    else:
+        from benchmarks import paper_tables
+        results = paper_tables.run_all()
     results["engine"] = engine_benchmarks()
+    results["solver_backend"] = solver_backend_benchmarks(quick=args.quick)
+    results["sweep"] = sweep_benchmarks(quick=args.quick)
     results["micro"] = micro_benchmarks()
     rev = _git_rev()
     results["meta"] = {"rev": rev, "wall_s": time.time() - t0,
-                       "unix_time": time.time()}
+                       "unix_time": time.time(), "quick": args.quick}
 
     os.makedirs("results", exist_ok=True)
-    results["trend"] = trend_report("results", results, rev)
+    if not args.quick:
+        # quick runs never enter the trend history: their small grids
+        # would read as huge spurious "improvements" next full run
+        results["trend"] = trend_report("results", results, rev)
 
     def _clean(o):
         if isinstance(o, dict):
@@ -309,6 +475,12 @@ def main() -> None:
         return float(o) if hasattr(o, "__float__") else str(o)
 
     cleaned = _clean(results)
+    if args.quick:
+        path = os.path.join("results", "bench_quick.json")
+        with open(path, "w") as f:
+            json.dump(cleaned, f, indent=1)
+        print(f"\nquick benchmarks done in {time.time()-t0:.1f}s -> {path}")
+        return
     bench_path = os.path.join("results", f"BENCH_{rev}.json")
     for path in (bench_path, os.path.join("results", "bench.json")):
         with open(path, "w") as f:

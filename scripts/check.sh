@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 gate + benchmark smoke: everything a PR must keep green.
+#
+#   scripts/check.sh           # full tier-1 pytest + quick benchmark smoke
+#   scripts/check.sh --fast    # skip the (slow) full test suite, smoke only
+#
+# The quick benchmark run exercises the jitted problem-(13) solver
+# backends (numpy vs jax parity + timing rows) and the on-device
+# revolution sweep on small grids, so a regression in the compiled
+# solver is caught without paying for a full 1000-sat sweep.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== tier-1 pytest =="
+    python -m pytest -x -q
+fi
+
+echo "== quick benchmark smoke (solver backends + sweep) =="
+python -m benchmarks.run --quick
+
+echo "check.sh: OK"

@@ -41,9 +41,17 @@ skip" plus the 1000-node hardening):
     passes (T_pass is per-satellite and unchanged; d_ISL shifts with N)
     and invalidate the cached revolution plan.
 
-Migration note: ``sim.params_a`` / ``sim.opt_a`` etc. remain as
-read/write views for one release; the canonical state is
-``sim.state`` (an :class:`~repro.core.train_state.SLTrainState`).
+The canonical train state is ``sim.state`` (an
+:class:`~repro.core.train_state.SLTrainState`); the pre-PR-2 4-tuple
+views (``sim.params_a`` etc.) are gone.
+
+Per-satellite boundary measurement: the planner batch carries one
+(budget, costs) instance per ring member, and each member's boundary
+payload is measured from ITS shard's batch shape (``data_for_sat`` must
+therefore be pure/peekable — calling it twice for the same indices must
+return equivalently-shaped batches).  A heterogeneous ring (per-sat
+batch shapes) plans in the same single batched solve as a homogeneous
+one.
 """
 from __future__ import annotations
 
@@ -120,10 +128,22 @@ class ConstellationConfig:
     # stays bounded, but simulated compute is proportional to the count).
     max_steps_per_pass: Optional[int] = 128
     pass_chunk_steps: int = 256          # batches materialized per scan
+    # problem-(13) solver backend for the revolution planner:
+    # "numpy" | "jax" | "auto" (resource_opt.solve_batch backends)
+    solver_backend: Optional[str] = None
 
 
 class ConstellationSim:
-    """Round-robin online SL over the orbital ring, training a real model."""
+    """Round-robin online SL over the orbital ring, training a real model.
+
+    ``data_for_sat(sat_id, batch_idx) -> batch`` MUST be pure (indexable,
+    side-effect free): the scheduler *peeks* each ring member's upcoming
+    batch once to meter its boundary payload for the revolution plan
+    (:meth:`_costs_for`), so a stateful provider (an iterator, a
+    consuming stream, an advancing RNG) would silently skip items.  Both
+    synthetic shard providers (``ImageryShards.batch_at`` /
+    ``TokenShards.batch_at``) satisfy this.
+    """
 
     def __init__(self, adapter: SplitAdapter, budget: PassBudget,
                  data_for_sat: Callable[[int, int], Dict],
@@ -143,7 +163,7 @@ class ConstellationSim:
         self.sl_pass = make_sl_pass(adapter,
                                     quantize_boundary=cfg.quantize_boundary,
                                     optimizer=self.optimizer)
-        self.planner = RevolutionPlanner()
+        self.planner = RevolutionPlanner(backend=cfg.solver_backend)
 
         n = budget.plane.n_sats
         self.sats: List[SatelliteState] = [
@@ -158,60 +178,41 @@ class ConstellationSim:
         # not a cache miss on every pass of a heterogeneous ring
         self._sat_costs: Dict[int, SplitCosts] = {}
 
-    # ---------------------------------------------- legacy 4-tuple views
-    # (deprecation shims for one release: the canonical state is
-    # ``self.state``; these read/write through to it.)
-    @property
-    def params_a(self):
-        return self.state.params_a
-
-    @params_a.setter
-    def params_a(self, v):
-        self.state = self.state.replace(params_a=v)
-
-    @property
-    def params_b(self):
-        return self.state.params_b
-
-    @params_b.setter
-    def params_b(self, v):
-        self.state = self.state.replace(params_b=v)
-
-    @property
-    def opt_a(self):
-        return self.state.opt_a
-
-    @opt_a.setter
-    def opt_a(self, v):
-        self.state = self.state.replace(opt_a=v)
-
-    @property
-    def opt_b(self):
-        return self.state.opt_b
-
-    @opt_b.setter
-    def opt_b(self, v):
-        self.state = self.state.replace(opt_b=v)
-
     # ------------------------------------------------------------- internals
     def _ring(self) -> List[SatelliteState]:
         return [s for s in self.sats if s.alive]
 
     def _measured_costs(self, dtx_bits_per_item: float) -> SplitCosts:
         base = self.adapter.costs()
-        d_isl = 8.0 * tree_bytes(self.params_a)       # measured handoff bytes
+        d_isl = 8.0 * tree_bytes(self.state.params_a)  # measured handoff bytes
         return dataclasses.replace(base, dtx_bits=dtx_bits_per_item,
                                    d_isl_bits=d_isl)
 
+    def _costs_for(self, sat_id: int) -> SplitCosts:
+        """This satellite's measured costs; first use peeks its shard.
+
+        Genuinely per-satellite boundary measurement: an unmeasured ring
+        member's upcoming batch is fetched (``data_for_sat`` is pure, so
+        peeking consumes nothing) and metered shape-only, instead of
+        broadcasting the current satellite's payload over the ring.
+        """
+        costs = self._sat_costs.get(sat_id)
+        if costs is None:
+            batch = self.data_for_sat(sat_id, self._batch_idx)
+            n = next(iter(batch.values())).shape[0]
+            costs = self._measured_costs(self._boundary_bits(batch) / n)
+            self._sat_costs[sat_id] = costs
+        return costs
+
     def _solve_pass(self, sat_id: int, costs: SplitCosts):
         """This pass's allocation, consumed from the revolution plan
-        (one batched solve per plan epoch, see core/mission).  Satellites
-        not yet measured default to this pass's costs, so a homogeneous
-        ring plans once and a heterogeneous one replans at most once per
-        newly-observed payload shape."""
+        (one batched solve per plan epoch, see core/mission).  Every
+        ring member contributes its own measured (budget, costs) batch
+        row via :meth:`_costs_for`, so a stable ring — homogeneous or
+        not — plans exactly once."""
         self._sat_costs[sat_id] = costs
         ring_ids = tuple(s.sat_id for s in self._ring())
-        ring_costs = [self._sat_costs.get(s, costs) for s in ring_ids]
+        ring_costs = [self._costs_for(s) for s in ring_ids]
         return self.planner.entry_for(sat_id, ring_ids, self.budget,
                                       ring_costs).shed
 
@@ -248,8 +249,9 @@ class ConstellationSim:
             if cfg.handoff_dir is not None:
                 from repro import ckpt
                 try:
-                    self.params_a, _, _ = ckpt.restore_handoff(
-                        cfg.handoff_dir, self.params_a)
+                    restored, _, _ = ckpt.restore_handoff(
+                        cfg.handoff_dir, self.state.params_a)
+                    self.state = self.state.replace(params_a=restored)
                 except FileNotFoundError:
                     pass        # failed before the first handoff: keep init
             return PassRecord(k, sat.sat_id, "failed")
@@ -258,7 +260,8 @@ class ConstellationSim:
         if sat.battery_j < cfg.reserve_j:
             self._handoff(k)
             return PassRecord(k, sat.sat_id, "skipped_energy",
-                              d_isl_bits=8.0 * tree_bytes(self.params_a))
+                              d_isl_bits=8.0 * tree_bytes(
+                                  self.state.params_a))
 
         # measure the true boundary payload shape-only (no probe step);
         # memoized per batch shape so steady-state passes trace nothing
@@ -311,7 +314,7 @@ class ConstellationSim:
         """Ship segment A to the successor (checkpoint == ISL payload)."""
         if self.cfg.handoff_dir is not None:
             from repro import ckpt
-            ckpt.save_handoff(self.cfg.handoff_dir, k, self.params_a,
+            ckpt.save_handoff(self.cfg.handoff_dir, k, self.state.params_a,
                               meta={"pass": k})
 
     # ------------------------------------------------------------- reporting

@@ -23,11 +23,23 @@ only when the inputs actually change:
 Steady-state constellations therefore pay ZERO per-pass solves: the
 planner's ``solve_calls`` counter (asserted in tests) shows one batched
 solve per plan epoch, however many passes consume it.
+
+The planner's batched solve dispatches through the solver backend
+selector (``backend="numpy" | "jax" | "auto"``, see
+:mod:`repro.core.resource_opt_jax`), and :func:`sweep_revolutions`
+goes one step further: a whole (ring size × cut point × item budget)
+scenario grid — e.g. 1000-sat rings × every ``SplitCosts`` cut — is
+built, shed and solved as ONE jitted device program, and its outputs
+(kept item counts, allocations) feed the fused pass executor as device
+arrays, with no host transfer between planning and training.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Hashable, Optional, Sequence, Tuple, Union
+from typing import (Any, Callable, Dict, Hashable, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
 
 from repro.core import resource_opt
 from repro.core.energy import PassBudget, SplitCosts
@@ -73,9 +85,14 @@ class RevolutionPlanner:
     batch instances) and stores the entries.  ``solve_calls`` counts
     batched solves, ``invalidations`` counts cache drops — both are
     observable for tests and benchmarks.
+
+    ``backend`` selects the problem-(13) solver implementation for the
+    batched solve ("numpy" | "jax" | "auto", default auto — see
+    :func:`~repro.core.resource_opt.solve_batch`).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, backend: Optional[str] = None) -> None:
+        self.backend = backend
         self.solve_calls = 0
         self.invalidations = 0
         self._key: Optional[Hashable] = None
@@ -114,7 +131,8 @@ class RevolutionPlanner:
         if not ring:
             raise ValueError("cannot plan an empty ring")
         blist, clist, key = self._instances(ring, budgets, costs)
-        shed = resource_opt.solve_with_shedding_batch(blist, clist)
+        shed = resource_opt.solve_with_shedding_batch(blist, clist,
+                                                      backend=self.backend)
         self.solve_calls += 1
         self._entries = {sid: PlanEntry(sid, slot, shed.at(slot))
                          for slot, sid in enumerate(ring)}
@@ -156,3 +174,140 @@ class RevolutionPlanner:
             self.invalidations += 1
         self._key = None
         self._entries = {}
+
+
+# --------------------------------------------------------------------------
+# On-device revolution sweeps: (ring size × cut point × item budget) grids.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RevolutionSweep:
+    """A planned (ring size × cut × budget) grid, resident on device.
+
+    Every array is a JAX device array of shape (R, C, B) — ring sizes ×
+    cut points × item budgets — in float64 (the sweep solves under the
+    backend's x64 scope).  Nothing here has touched the host: chaining
+    into pass execution (:meth:`steps_for` → ``make_sl_pass(...,
+    n_valid=...)``) keeps the whole plan→train pipeline device-side.
+    Call :meth:`to_host` once at the end to materialize results.
+    """
+
+    ring_sizes: np.ndarray              # (R,) host metadata
+    cut_names: Tuple[str, ...]          # (C,) host metadata
+    n_items: np.ndarray                 # (B,) host metadata
+    e_pass: Any                         # (R,C,B) eq. (11) per pass [J]
+    t_pass: Any                         # (R,C,B) eq. (12) per pass [s]
+    kept_fraction: Any                  # (R,C,B) shedding outcome
+    n_items_kept: Any                   # (R,C,B)
+    feasible: Any                       # (R,C,B) bool (post-shedding)
+    kkt_residual: Any                   # (R,C,B)
+    phase_times: Any                    # (R,C,B,4) canonical phase order
+    e_revolution: Any                   # (R,C,B) ring size × e_pass
+    best_cut: Any                       # (R,B) argmin-energy cut; -1 if
+                                        # no cut is feasible in that cell
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        return (len(self.ring_sizes), len(self.cut_names),
+                len(self.n_items))
+
+    def steps_for(self, batch_size: int):
+        """Fused-pass step counts per grid cell, as a device int32 array.
+
+        The bridge into :func:`~repro.core.sl_step.make_sl_pass`: pick a
+        cell of this array (still on device) and hand it to the executor
+        as ``n_valid`` — the pass scans exactly the allocated number of
+        steps without ever reading the plan back to the host.
+        """
+        from repro.core import resource_opt_jax as roj
+        import jax.numpy as jnp
+
+        with roj.x64_scope():
+            steps = jnp.ceil(self.n_items_kept / float(batch_size))
+            return jnp.maximum(steps, 1.0).astype(jnp.int32)
+
+    def to_host(self) -> Dict[str, np.ndarray]:
+        """One explicit device→host sync of every result array."""
+        out = {"ring_sizes": self.ring_sizes, "n_items": self.n_items}
+        for f in ("e_pass", "t_pass", "kept_fraction", "n_items_kept",
+                  "feasible", "kkt_residual", "phase_times",
+                  "e_revolution", "best_cut"):
+            out[f] = np.asarray(getattr(self, f))
+        return out
+
+
+def sweep_revolutions(ring_sizes: Sequence[int],
+                      costs: Sequence[SplitCosts],
+                      n_items: Sequence[float],
+                      *,
+                      budget: Optional[PassBudget] = None,
+                      dtx_bits=None,
+                      min_fraction: float = 0.05,
+                      tol: float = 1e-10,
+                      max_iters: int = 80) -> RevolutionSweep:
+    """Plan a whole scenario grid as ONE jitted device program.
+
+    The grid is (ring size × cut point × item budget): ``ring_sizes``
+    vary the ring population (entering problem (13) through the ISL hop
+    distance, eq. 5), ``costs`` carry the candidate cut points, and
+    ``n_items`` the per-pass item budgets.  Coefficient construction,
+    the vectorized kept-fraction shedding, and the jit+vmap dual
+    bisection all run inside one compiled call on the default JAX
+    device — the classic 1000-sat × every-cut sweep never round-trips
+    through host NumPy, and the resulting plan feeds
+    :func:`~repro.core.sl_step.make_sl_pass` as arrays
+    (:meth:`RevolutionSweep.steps_for`).
+
+    ``budget`` is the scenario template (plane/link/ISL/devices; its
+    ``n_items`` and the plane's ``n_sats`` are overridden by the grid
+    axes).  ``dtx_bits`` optionally overrides the cuts' boundary
+    payloads with *measured* per-cut values — e.g. the array produced
+    by :func:`~repro.core.sl_step.ring_boundary_bits` — so the sweep
+    plans from what the model actually transmits.
+    """
+    from repro.core import resource_opt_jax as roj
+
+    if not roj.available():                       # pragma: no cover
+        raise RuntimeError(
+            "sweep_revolutions needs the JAX solver backend "
+            "(repro.core.resource_opt_jax); install jax or use "
+            "RevolutionPlanner with backend='numpy' instead")
+    import jax.numpy as jnp
+
+    budget = PassBudget() if budget is None else budget
+    costs = list(costs)
+    ring = np.asarray(list(ring_sizes), dtype=np.int64)
+    items = np.asarray(list(n_items), dtype=np.float64)
+    if ring.size == 0 or not costs or items.size == 0:
+        raise ValueError("sweep_revolutions needs non-empty ring_sizes, "
+                         "costs and n_items axes")
+    if np.any(ring < 1):
+        raise ValueError("ring sizes must be >= 1 satellite")
+
+    w1 = [c.w1_flops for c in costs]
+    w2 = [c.w2_flops for c in costs]
+    disl = [c.d_isl_bits for c in costs]
+    dtx = [c.dtx_bits for c in costs] if dtx_bits is None else dtx_bits
+
+    sc = roj.grid_scalars(budget.plane, budget.link, budget.isl,
+                          budget.sat_device, budget.gs_device)
+    rep, frac = roj.sweep_grid(sc, ring, w1, w2, dtx, disl, items,
+                               min_fraction=min_fraction, tol=tol,
+                               max_iters=max_iters)
+    with roj.x64_scope():                 # derived arrays, still on device
+        e_pass = rep.e_total
+        t_pass = rep.t_total
+        n_kept = frac * jnp.asarray(items)[None, None, :]
+        e_rev = jnp.asarray(ring, jnp.float64)[:, None, None] * e_pass
+        # -1 sentinel where even max shedding leaves every cut infeasible
+        # (argmin over all-inf would silently report cut 0)
+        best_cut = jnp.where(
+            rep.feasible.any(axis=1),
+            jnp.argmin(jnp.where(rep.feasible, e_pass, jnp.inf), axis=1),
+            -1).astype(jnp.int32)
+    return RevolutionSweep(
+        ring_sizes=ring, cut_names=tuple(c.name for c in costs),
+        n_items=items, e_pass=e_pass, t_pass=t_pass, kept_fraction=frac,
+        n_items_kept=n_kept, feasible=rep.feasible,
+        kkt_residual=rep.kkt_residual, phase_times=rep.phase_times,
+        e_revolution=e_rev, best_cut=best_cut)

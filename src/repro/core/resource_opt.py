@@ -48,12 +48,25 @@ original pure-Python implementation is kept as :func:`solve_reference`
 and the test suite asserts element-wise parity between the two.
 :func:`best_split_batch` runs the cut-point sweep through one batched
 call.
+
+Solver backends
+---------------
+:func:`solve_batch` (and everything layered on it — shedding, best
+split, the revolution planner) takes ``backend="numpy" | "jax" |
+"auto"``.  ``"numpy"`` is this module's lockstep-array path: the CPU
+fallback and the parity oracle.  ``"jax"`` routes through
+:mod:`repro.core.resource_opt_jax` — the same algorithm as one jitted
+``vmap`` + ``lax.while_loop`` program, so device-resident sweeps skip
+the host round-trip entirely.  ``"auto"`` (the default, overridable via
+``REPRO_SOLVER_BACKEND``) picks jax on an accelerator or for large
+batches, numpy otherwise.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional, Sequence, Tuple, Union
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -429,22 +442,41 @@ class BatchSolveReport:
                            float(self.kkt_residual[i]), 0, times)
 
 
-def solve_batch(budgets: Union[PassBudget, Sequence[PassBudget]],
-                costs: Union[SplitCosts, Sequence[SplitCosts]],
-                tol: float = 1e-10, max_iters: int = 80) -> BatchSolveReport:
-    """Solve problem (13) for B (budget, costs) instances at once.
+# "auto" flips to the jax backend at this batch size on CPU (measured
+# crossover in benchmarks/run.py `solver_backend` rows); any accelerator
+# flips immediately.  Override the default with REPRO_SOLVER_BACKEND.
+_AUTO_MIN_JAX_BATCH = 512
 
-    ``budgets`` and ``costs`` may each be a single object or a sequence;
-    a single object is broadcast against the other argument.  All B
-    dual bisections run simultaneously as NumPy array ops — the comm
-    phases use the Lambert-W closed form instead of an inner bisection —
-    so the cost is O(iterations) vector ops total, not O(B · iterations)
-    Python arithmetic.
+
+def _resolve_backend(backend: Optional[str], n_instances: int) -> str:
+    """Map the user's backend choice (or "auto") to "numpy" | "jax"."""
+    backend = backend or os.environ.get("REPRO_SOLVER_BACKEND", "auto")
+    if backend == "auto":
+        try:
+            from repro.core import resource_opt_jax
+        except Exception:                        # pragma: no cover
+            return "numpy"
+        if not resource_opt_jax.available():
+            return "numpy"
+        if resource_opt_jax.on_accelerator() \
+                or n_instances >= _AUTO_MIN_JAX_BATCH:
+            return "jax"
+        return "numpy"
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown solver backend {backend!r}; expected "
+                         "'numpy', 'jax' or 'auto'")
+    return backend
+
+
+def _gather_coeff_arrays(blist: Sequence[PassBudget],
+                         clist: Sequence[SplitCosts]) -> Dict[str, np.ndarray]:
+    """Per-instance coefficient arrays (cheap Python setup loop).
+
+    The single host-side gather shared by the NumPy solver below and the
+    JAX backend (:mod:`repro.core.resource_opt_jax`), so both batch
+    paths consume identical float64 inputs.
     """
-    blist, clist = _broadcast_instances(budgets, costs)
     B = len(blist)
-
-    # ---- gather per-instance coefficients (cheap Python setup loop) ----
     k = np.zeros((B, 2))          # [sat_proc, gs_proc]
     tmin_p = np.zeros((B, 2))
     cc = np.zeros((B, 2))         # [downlink, uplink] bits/Hz
@@ -463,6 +495,40 @@ def solve_batch(budgets: Union[PassBudget, Sequence[PassBudget]],
         t_budget[i] = b.time_budget_s(c)
         e_isl[i] = b.isl_energy_j(c)
         t_fixed[i] = b.fixed_overhead_s(c)
+    return dict(k=k, tmin_p=tmin_p, cc=cc, tmin_c=tmin_c, gain=gain,
+                t_budget=t_budget, e_isl=e_isl, t_fixed=t_fixed)
+
+
+def solve_batch(budgets: Union[PassBudget, Sequence[PassBudget]],
+                costs: Union[SplitCosts, Sequence[SplitCosts]],
+                tol: float = 1e-10, max_iters: int = 80,
+                backend: Optional[str] = None) -> BatchSolveReport:
+    """Solve problem (13) for B (budget, costs) instances at once.
+
+    ``budgets`` and ``costs`` may each be a single object or a sequence;
+    a single object is broadcast against the other argument.  All B
+    dual bisections run simultaneously as NumPy array ops — the comm
+    phases use the Lambert-W closed form instead of an inner bisection —
+    so the cost is O(iterations) vector ops total, not O(B · iterations)
+    Python arithmetic.
+
+    ``backend`` selects the implementation: ``"numpy"`` (this module),
+    ``"jax"`` (jit+vmap on the default JAX device, see
+    :mod:`repro.core.resource_opt_jax`) or ``"auto"``/None.
+    """
+    blist, clist = _broadcast_instances(budgets, costs)
+    B = len(blist)
+    if _resolve_backend(backend, B) == "jax":
+        from repro.core import resource_opt_jax
+        return resource_opt_jax.solve_batch_jax(blist, clist, tol=tol,
+                                                max_iters=max_iters)
+
+    # ---- gather per-instance coefficients (cheap Python setup loop) ----
+    arrs = _gather_coeff_arrays(blist, clist)
+    k, tmin_p = arrs["k"], arrs["tmin_p"]
+    cc, tmin_c = arrs["cc"], arrs["tmin_c"]
+    gain, t_budget = arrs["gain"], arrs["t_budget"]
+    e_isl, t_fixed = arrs["e_isl"], arrs["t_fixed"]
 
     live_p = k > 0.0
     live_c = cc > 0.0
@@ -621,7 +687,8 @@ def solve_with_shedding_batch(
         budgets: Union[PassBudget, Sequence[PassBudget]],
         costs: Union[SplitCosts, Sequence[SplitCosts]],
         min_fraction: float = 0.05,
-        tol: float = 1e-4) -> BatchSheddingReport:
+        tol: float = 1e-4,
+        backend: Optional[str] = None) -> BatchSheddingReport:
     """Vectorized :func:`solve_with_shedding` over B instances.
 
     Every phase's t_min scales linearly with n_items while the time
@@ -630,7 +697,10 @@ def solve_with_shedding_batch(
     lockstep across all instances as array arithmetic (no inner solves),
     then ONE :func:`solve_batch` call allocates every instance at its
     kept item count.  This is the planner-scale path: a whole ring
-    revolution's shedding decisions cost one batched solve.
+    revolution's shedding decisions cost one batched solve.  ``backend``
+    selects that solve's implementation (see :func:`solve_batch`); a
+    fully device-side shedding path lives in
+    :func:`repro.core.resource_opt_jax.shed_and_solve_coeffs`.
     """
     blist, clist = _broadcast_instances(budgets, costs)
     B = len(blist)
@@ -664,7 +734,7 @@ def solve_with_shedding_batch(
     scaled = [b if f == 1.0 else dataclasses.replace(b,
                                                      n_items=b.n_items * f)
               for b, f in zip(blist, frac)]
-    rep = solve_batch(scaled, clist)
+    rep = solve_batch(scaled, clist, backend=backend)
     n_kept = np.array([b.n_items for b in blist]) * frac
     return BatchSheddingReport(rep, frac, n_kept)
 
@@ -733,7 +803,8 @@ def solve_pipelined(budget: PassBudget, costs: SplitCosts,
 # --------------------------------------------------------------------------
 
 def best_split_batch(budget: PassBudget,
-                     candidates: Sequence[SplitCosts]
+                     candidates: Sequence[SplitCosts],
+                     backend: Optional[str] = None
                      ) -> Tuple[SplitCosts, SolveReport]:
     """Jointly pick the cut point ℓ and the allocation — one batched solve.
 
@@ -744,14 +815,14 @@ def best_split_batch(budget: PassBudget,
     cands = list(candidates)
     if not cands:
         raise ValueError("no split candidates")
-    rep = solve_batch(budget, cands)
+    rep = solve_batch(budget, cands, backend=backend)
     e = np.where(rep.feasible, rep.e_total, np.inf)
     i = int(np.argmin(e))
     if np.isfinite(e[i]):
         return cands[i], rep.report_at(i)
     # nothing feasible: fall back to max shedding on the least-bad plan —
     # one vectorized kept-fraction bisection + solve across all cuts
-    shed = solve_with_shedding_batch(budget, cands)
+    shed = solve_with_shedding_batch(budget, cands, backend=backend)
     j = int(np.argmax(shed.kept_fraction))
     return cands[j], shed.at(j).report
 

@@ -46,10 +46,14 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.energy import SplitCosts
 from repro.core.splitting import SplitPlan
 from repro.kernels import ops
+# padded step counts share the repo-wide bucketing schedule (pow2 up to
+# 16, then 1/8-octave) with the solver backend's batch padding
+from repro.utils.bucketing import bucket_size as _bucket_size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +161,22 @@ def make_boundary_meter(adapter: SplitAdapter,
     return measure
 
 
+def ring_boundary_bits(adapter: SplitAdapter, batches: Sequence[Dict],
+                       quantize_boundary: bool = False) -> np.ndarray:
+    """Per-satellite boundary payloads (bits, one way) as ONE array.
+
+    ``batches`` holds one representative batch per ring member (their
+    shapes may differ — non-IID shards, ragged tails); the result is the
+    array feed for the device-resident planner
+    (:func:`repro.core.mission.sweep_revolutions` ``dtx_bits=`` or the
+    per-satellite instance lists of ``plan_revolution``) instead of a
+    Python-int-at-a-time protocol.  Shape-only via ``jax.eval_shape``,
+    memoized per distinct shape.
+    """
+    meter = make_boundary_meter(adapter, quantize_boundary)
+    return np.asarray([float(meter(b)) for b in batches], dtype=np.float64)
+
+
 # --------------------------------------------------------------------------
 # The scan-fused pass engine.
 # --------------------------------------------------------------------------
@@ -167,7 +187,11 @@ class SLPassResult:
 
     ``state`` is the :class:`~repro.core.train_state.SLTrainState` after
     the pass; the ``params_a``/``params_b``/``opt_a``/``opt_b``
-    properties are a deprecation shim for the old 4-tuple API.
+    properties are read-only conveniences over it.
+
+    When the pass ran with a device-side ``n_valid`` (planner-driven
+    step count), ``losses`` still has static length k but entries at or
+    beyond the allocated count are NaN — aggregate with ``nanmean``.
     """
 
     losses: jnp.ndarray                 # (k,) per-step training loss
@@ -193,23 +217,6 @@ class SLPassResult:
         return self.state.opt_b
 
 
-def _next_pow2(k: int) -> int:
-    return 1 << max(k - 1, 0).bit_length() if k > 1 else 1
-
-
-def _bucket_size(k: int) -> int:
-    """Padded step count: powers of two up to 16, then 1/8-octave steps.
-
-    Pure pow2 bucketing wastes up to ~2x compute on the masked padding
-    steps (k=65 would scan 128 full grad computations).  Above 16 we
-    round up to a multiple of next_pow2(k)/8 instead: still O(1)
-    distinct compilations per octave, but the padded compute is bounded
-    at 25% worst-case (typically <12%).
-    """
-    if k <= 16:
-        return _next_pow2(k)
-    gran = _next_pow2(k) // 8
-    return -(-k // gran) * gran
 
 
 def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
@@ -240,9 +247,12 @@ def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
     unchanged — keeping recompiles rare at <=25% worst-case padded
     compute.
 
-    Deprecated: the old 4-tuple call
-    ``sl_pass(params_a, params_b, opt_a, opt_b, batches)`` still works
-    for one release (the states are wrapped into a fresh SLTrainState).
+    ``sl_pass(state, batches, n_valid=...)`` accepts a *device* integer
+    scalar bounding how many of the k steps actually train — the raw
+    output of the on-device revolution planner
+    (:meth:`~repro.core.mission.RevolutionSweep.steps_for`).  Steps at
+    index >= n_valid are carry passthroughs and report NaN loss, so the
+    planner's allocation drives the pass with no host synchronization.
     """
     from repro.core.train_state import SLTrainState
     from repro.train.optimizer import resolve_optimizer
@@ -280,7 +290,8 @@ def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
 
         return jax.tree.map(uniq, state)
 
-    def run_state(state, batches: Union[Sequence[Dict], Dict]) -> SLPassResult:
+    def run_state(state, batches: Union[Sequence[Dict], Dict],
+                  n_valid=None) -> SLPassResult:
         # even a donate=False pass must reject a consumed state: its
         # buffers may already be freed by the pass that consumed it
         state._require_live("pass")
@@ -289,6 +300,9 @@ def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
                 raise ValueError("a pass needs at least one batch")
             keys = [_batch_shape_key(b) for b in batches]
             if any(key != keys[0] for key in keys):
+                if n_valid is not None:
+                    raise ValueError("n_valid requires same-shape batches "
+                                     "(one fused scan)")
                 # ragged pass (e.g. a partial final shard batch): scan
                 # consecutive same-shape groups, chaining the donated
                 # state between them.  Payload is reported for the first
@@ -320,7 +334,13 @@ def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
             batches = jax.tree.map(
                 lambda x: jnp.concatenate(
                     [x, jnp.repeat(x[-1:], kb - k, axis=0)]), batches)
-        valid = jnp.arange(kb) < k
+        if n_valid is None:
+            valid = jnp.arange(kb) < k
+        else:
+            # device-resident step budget (e.g. RevolutionSweep.steps_for):
+            # the comparison runs on device — no host sync of the plan
+            valid = jnp.arange(kb) < jnp.minimum(
+                jnp.asarray(n_valid, jnp.int32), k)
         call_state = _dedupe_buffers(state) if donate else state
         new_state, losses = jitted(call_state, batches, valid)
         if donate:
@@ -328,22 +348,14 @@ def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
         return SLPassResult(losses=losses[:k], state=new_state, n_steps=k,
                             dtx_bits_down=payload, dtx_bits_up=payload)
 
-    def run(*args) -> SLPassResult:
-        if len(args) == 2:
-            state, batches = args
-            if not isinstance(state, SLTrainState):
-                raise TypeError("sl_pass(state, batches) expects an "
-                                f"SLTrainState, got {type(state).__name__}")
-            return run_state(state, batches)
-        if len(args) == 5:
-            # deprecated 4-tuple API, kept as a shim for one release
-            pa, pb, oa, ob, batches = args
-            state = SLTrainState(pa, pb, oa, ob,
-                                 step=jnp.zeros((), jnp.int32))
-            return run_state(state, batches)
-        raise TypeError("sl_pass takes (state, batches) or the deprecated "
-                        f"(params_a, params_b, opt_a, opt_b, batches); got "
-                        f"{len(args)} arguments")
+    def run(state, batches, n_valid=None) -> SLPassResult:
+        if not isinstance(state, SLTrainState):
+            raise TypeError(
+                "sl_pass(state, batches) expects an SLTrainState (the old "
+                "4-tuple (params_a, params_b, opt_a, opt_b, batches) call "
+                "was removed; build one with SLTrainState.create), got "
+                f"{type(state).__name__}")
+        return run_state(state, batches, n_valid=n_valid)
 
     return run
 

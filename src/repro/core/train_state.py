@@ -108,4 +108,5 @@ class SLTrainState:
 
     def as_tuple(self) -> Tuple[Any, Any, Any, Any]:
         """Legacy 4-tuple view (old ``make_sl_pass`` argument order)."""
+        self._require_live("as_tuple")
         return self.params_a, self.params_b, self.opt_a, self.opt_b

@@ -13,8 +13,13 @@ from repro.core import resource_opt as ro
 from repro.core.energy import PassBudget, SplitCosts, direct_download_costs
 from repro.core.sl_step import (autoencoder_adapter, boundary_bits,
                                 make_sl_pass, make_sl_step)
+from repro.core.train_state import SLTrainState
 from repro.data.synthetic import ImageryShards
-from repro.train.optimizer import sgd_init, sgd_update
+from repro.train.optimizer import sgd, sgd_init, sgd_update
+
+
+def _sgd_state(pa, pb, lr=1e-2):
+    return SLTrainState.create(pa, pb, sgd(lr=lr))
 
 BUDGET = PassBudget()
 
@@ -202,8 +207,7 @@ def test_sl_pass_matches_sequential_steps(k):
     batches = _batches(k)
 
     losses_ref, pa_ref, pb_ref, last = _sequential(ad, pa, pb, batches)
-    res = make_sl_pass(ad, lr=1e-2)(pa, pb, sgd_init(pa), sgd_init(pb),
-                                    batches)
+    res = make_sl_pass(ad, lr=1e-2)(_sgd_state(pa, pb), batches)
     assert res.n_steps == k
     assert res.losses.shape == (k,)
     np.testing.assert_allclose(np.asarray(res.losses), losses_ref,
@@ -225,7 +229,7 @@ def test_sl_pass_quantized_boundary_parity():
     batches = _batches(3, shard=1)
     losses_ref, _, _, last = _sequential(ad, pa, pb, batches, quantize=True)
     res = make_sl_pass(ad, quantize_boundary=True, lr=1e-2)(
-        pa, pb, sgd_init(pa), sgd_init(pb), batches)
+        _sgd_state(pa, pb), batches)
     np.testing.assert_allclose(np.asarray(res.losses), losses_ref,
                                rtol=1e-5, atol=1e-6)
     assert res.dtx_bits_down == last.dtx_bits_down   # int8: 4x smaller
@@ -241,8 +245,7 @@ def test_sl_pass_ragged_batches_match_sequential():
     batches = full + [partial]
 
     losses_ref, pa_ref, _, _ = _sequential(ad, pa, pb, batches)
-    res = make_sl_pass(ad, lr=1e-2)(pa, pb, sgd_init(pa), sgd_init(pb),
-                                    batches)
+    res = make_sl_pass(ad, lr=1e-2)(_sgd_state(pa, pb), batches)
     assert res.n_steps == 4
     np.testing.assert_allclose(np.asarray(res.losses), losses_ref,
                                rtol=1e-5, atol=1e-6)
@@ -276,12 +279,19 @@ def test_sl_pass_accepts_prestacked_batches():
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
     # donate=False: the default donates the param buffers to the jitted
     # call, so the same arrays cannot feed two separate passes.
-    r_list = make_sl_pass(ad, donate=False)(pa, pb, sgd_init(pa),
-                                            sgd_init(pb), batches)
-    r_stk = make_sl_pass(ad, donate=False)(pa, pb, sgd_init(pa),
-                                           sgd_init(pb), stacked)
+    state = _sgd_state(pa, pb)
+    r_list = make_sl_pass(ad, donate=False)(state, batches)
+    r_stk = make_sl_pass(ad, donate=False)(state, stacked)
     np.testing.assert_allclose(np.asarray(r_list.losses),
                                np.asarray(r_stk.losses), rtol=1e-6)
+
+
+def test_sl_pass_rejects_legacy_4_tuple_call():
+    """The PR-2 deprecation shim is gone: the 4-tuple call raises."""
+    ad = autoencoder_adapter(cut=5, img=32)
+    pa, pb = ad.init(jax.random.key(0))
+    with pytest.raises(TypeError, match="SLTrainState"):
+        make_sl_pass(ad)(pa, _batches(1))
 
 
 def test_constellation_runs_beyond_old_16_step_cap():

@@ -58,9 +58,11 @@ def test_handoff_checkpoint_roundtrip(tmp_path):
     from repro import ckpt
     sim = _sim(n_passes=3, handoff_dir=str(tmp_path))
     sim.run()
-    restored, meta, idx = ckpt.restore_handoff(str(tmp_path), sim.params_a)
+    restored, meta, idx = ckpt.restore_handoff(str(tmp_path),
+                                               sim.state.params_a)
     assert idx == 2
-    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(sim.params_a)):
+    for a, b in zip(jax.tree.leaves(restored),
+                    jax.tree.leaves(sim.state.params_a)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert meta["payload_bytes"] > 0
 

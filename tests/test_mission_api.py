@@ -486,5 +486,6 @@ def test_constellation_sgd_parity_with_pre_redesign_path():
                                              rel=1e-5)
         assert recs[k].e_total_j == pytest.approx(
             rep_ref.allocation.e_total, rel=1e-6)
-    for got, ref in zip(jax.tree.leaves(sim.params_a), jax.tree.leaves(pa)):
+    for got, ref in zip(jax.tree.leaves(sim.state.params_a),
+                        jax.tree.leaves(pa)):
         np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
