@@ -312,6 +312,76 @@ def sweep_benchmarks(quick: bool = False):
     return out
 
 
+def device_sim_benchmarks(quick: bool = False):
+    """Closed-loop rows: the host Python scheduler
+    (``ConstellationSim.run()``) vs the device-resident engine
+    (``repro.sim.device_sim``) running the SAME steady-state scenario —
+    planning + reserve-skip policy + masked fused passes +
+    battery/recharge accounting — on identical data (the traceable
+    provider serves both).  Quick mode: a 16-sat ring × 2 revolutions;
+    full mode adds the 64-sat and 1000-sat rings the ISSUE/ROADMAP
+    target.  Parity of trained/skipped counts is asserted per row.
+    """
+    from repro.core.constellation import (ConstellationConfig,
+                                          ConstellationSim)
+    from repro.core.energy import PassBudget
+    from repro.core.orbits import OrbitalPlane
+    from repro.core.sl_step import autoencoder_adapter
+    from repro.sim.data import DeviceImageryShards
+
+    print("== closed-loop benchmarks (host scheduler vs device engine) ==")
+    print("name,us_per_call,derived")
+    out = {}
+    shards = DeviceImageryShards(img=32, batch=2)
+    adapter = autoencoder_adapter(cut=5, img=32)
+    # (ring size, revolutions, fused steps per pass): the 1000-sat row
+    # runs 1 step/pass so the host baseline stays affordable on CPU
+    scenarios = [(16, 2, 2)] if quick else [(64, 2, 2), (1000, 1, 1)]
+    for n_sats, n_rev, k_steps in scenarios:
+        budget = PassBudget(plane=OrbitalPlane(n_sats=n_sats), n_items=4e6)
+        cfg = ConstellationConfig(
+            batch_size=2, n_passes=n_rev * n_sats, battery_j=200.0,
+            recharge_w=1e-4, reserve_j=150.0,
+            max_steps_per_pass=k_steps)
+
+        # both cold rows are symmetric end-to-end accounting (fresh sim,
+        # jit compiles included — what a consumer pays once); the
+        # post-compile row re-dispatches the SAME engine, i.e. the
+        # steady-state cost of every further revolution batch.
+        def host_run():
+            sim = ConstellationSim(adapter, budget, shards, cfg)
+            sim.run()
+            return sim.summary()
+
+        us_host, hs = _timeit(host_run, n=1, warmup=0)
+        engine = ConstellationSim(adapter, budget, shards,
+                                  cfg).as_device_sim()
+        us_cold, res = _timeit(engine.run, n=1, warmup=0)
+        ds = res.summary()
+        us_warm, _ = _timeit(engine.run, n=1, warmup=0)
+        parity = (hs["trained"] == ds["trained"]
+                  and hs["skipped"] == ds["skipped"])
+        assert parity, (f"host/device closed-loop divergence at "
+                        f"{n_sats} sats: host {hs} vs device {ds}")
+        n_passes = n_rev * n_sats
+        out[f"closed_loop_host_{n_sats}"] = dict(
+            us=us_host, n_passes=n_passes, us_per_pass=us_host / n_passes)
+        out[f"closed_loop_device_{n_sats}"] = dict(
+            us=us_cold, n_passes=n_passes, us_per_pass=us_cold / n_passes,
+            speedup_vs_host=us_host / us_cold, parity_vs_host=parity)
+        out[f"closed_loop_device_warm_{n_sats}"] = dict(
+            us=us_warm, n_passes=n_passes, us_per_pass=us_warm / n_passes,
+            speedup_vs_host=us_host / us_warm)
+        print(f"closed_loop_host_{n_sats},{us_host:.0f},"
+              f"{n_passes}-python-dispatched-passes-cold")
+        print(f"closed_loop_device_{n_sats},{us_cold:.0f},"
+              f"{us_host / us_cold:.1f}x-vs-host-cold-incl-compile,"
+              f"parity={parity}")
+        print(f"closed_loop_device_warm_{n_sats},{us_warm:.0f},"
+              f"{us_host / us_warm:.1f}x-vs-host-post-compile")
+    return out
+
+
 def micro_benchmarks():
     """us/call for the SL step + each kernel's jnp path (CPU; the numbers
     are for regression tracking, not TPU performance claims)."""
@@ -454,6 +524,7 @@ def main(argv=None) -> None:
     results["engine"] = engine_benchmarks()
     results["solver_backend"] = solver_backend_benchmarks(quick=args.quick)
     results["sweep"] = sweep_benchmarks(quick=args.quick)
+    results["device_sim"] = device_sim_benchmarks(quick=args.quick)
     results["micro"] = micro_benchmarks()
     rev = _git_rev()
     results["meta"] = {"rev": rev, "wall_s": time.time() - t0,

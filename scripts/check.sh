@@ -16,9 +16,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== tier-1 pytest =="
     python -m pytest -x -q
+else
+    # --fast skips pytest, so run the standalone host-vs-device parity
+    # smoke instead (the full path already covers it twice: the
+    # test_device_sim suite and the asserted closed_loop_* bench rows)
+    echo "== device-sim smoke (host-vs-device closed-loop parity) =="
+    python -c "from repro.sim.device_sim import _smoke; _smoke()"
 fi
 
-echo "== quick benchmark smoke (solver backends + sweep) =="
+echo "== quick benchmark smoke (solver backends + sweep + closed loop) =="
 python -m benchmarks.run --quick
 
 echo "check.sh: OK"

@@ -52,6 +52,22 @@ therefore be pure/peekable — calling it twice for the same indices must
 return equivalently-shaped batches).  A heterogeneous ring (per-sat
 batch shapes) plans in the same single batched solve as a homogeneous
 one.
+
+Host oracle vs device engine
+----------------------------
+This Python scheduler is the feature-complete *oracle*: elastic
+membership, random failures, checkpoint handoffs and arbitrary data
+providers, at one Python dispatch per pass.  Steady-state closed loops
+delegate to the device-resident *engine*
+(:mod:`repro.sim.device_sim` — the whole (revolution × ring-slot) loop
+as one jitted scan) via ``run(engine="device")``, which folds the
+engine's telemetry back into :class:`PassRecord` form; small-ring
+parity between the two is pinned by ``tests/test_device_sim.py``.  The
+battery policy (clamp to ``[0, battery_j]``) is shared with the engine
+through :func:`repro.core.energy.clamp_battery`, and recharge is
+membership-aware: a satellite collects solar recharge exactly for the
+passes it was a ring member of (joiners from their join pass, leavers
+until their leave pass).
 """
 from __future__ import annotations
 
@@ -65,7 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import resource_opt
-from repro.core.energy import PassBudget, SplitCosts
+from repro.core.energy import PassBudget, SplitCosts, clamp_battery
 from repro.core.mission import RevolutionPlanner
 from repro.core.orbits import OrbitalPlane
 from repro.core.sl_step import (SplitAdapter, make_boundary_meter,
@@ -82,6 +98,7 @@ class SatelliteState:
     alive: bool = True
     passes_served: int = 0
     energy_spent_j: float = 0.0
+    joined_pass: int = 0              # first pass this sat was a ring member
 
 
 @dataclasses.dataclass
@@ -98,6 +115,8 @@ class PassRecord:
     t_total_s: float = 0.0
     d_isl_bits: float = 0.0
     n_items: float = 0.0
+    battery_j: float = 0.0            # serving sat's battery at pass end
+                                      # (post-drain, post-recharge)
 
 
 @dataclasses.dataclass
@@ -116,6 +135,11 @@ class ConstellationConfig:
     recharge_w: float = 20.0             # solar recharge between passes
     reserve_j: float = 100.0             # skip threshold
     fail_prob: float = 0.0
+    # battery charge (as a fraction of battery_j) a joining satellite
+    # arrives with: freshly launched sats need not be topped up, and a
+    # partial charge makes the membership-aware recharge accounting
+    # observable (a joiner recharges only from its join pass onward)
+    join_battery_frac: float = 1.0
     seed: int = 0
     handoff_dir: Optional[str] = None    # persist handoffs (fault tolerance)
     join_events: Dict[int, int] = dataclasses.field(default_factory=dict)
@@ -217,27 +241,54 @@ class ConstellationSim:
                                       ring_costs).shed
 
     # ------------------------------------------------------------------ run
-    def run(self) -> List[PassRecord]:
+    def run(self, engine: str = "host") -> List[PassRecord]:
+        """Run the configured passes; ``engine`` picks the executor.
+
+        ``"host"`` is this Python scheduler — the feature-complete
+        oracle (elastic membership, random failures, checkpoint
+        handoffs).  ``"device"`` delegates a steady-state run to the
+        device-resident engine (:mod:`repro.sim.device_sim`): the whole
+        closed loop executes as one jitted scan and the telemetry is
+        folded back into :class:`PassRecord` form — see
+        :meth:`run_device` for the preconditions.
+        """
+        if engine == "device":
+            return self.run_device()
+        if engine != "host":
+            raise ValueError(f"unknown engine {engine!r}; expected "
+                             "'host' or 'device'")
         cfg = self.cfg
         for k in range(cfg.n_passes):
             # elastic membership
             if k in cfg.join_events:
                 for _ in range(cfg.join_events[k]):
-                    self.sats.append(SatelliteState(len(self.sats),
-                                                    cfg.battery_j))
+                    self.sats.append(SatelliteState(
+                        len(self.sats),
+                        clamp_battery(cfg.battery_j
+                                      * cfg.join_battery_frac,
+                                      cfg.battery_j),
+                        joined_pass=k))
             if k in cfg.leave_events:
                 sid = cfg.leave_events[k] % len(self.sats)
                 self.sats[sid].alive = False
 
+            # the ring that serves pass k — recharge accounting below is
+            # against THIS snapshot, so a satellite joining at a later
+            # pass (or one that left before this pass) cannot collect
+            # solar recharge for a pass it was never a member of
             ring = self._ring()
             sat = ring[k % len(ring)]
             rec = self._run_pass(k, sat)
             self.records.append(rec)
-            # solar recharge for everyone between passes
-            for s in self._ring():
-                s.battery_j = min(cfg.battery_j,
-                                  s.battery_j + cfg.recharge_w
-                                  * self.budget.plane.pass_duration_s)
+            # solar recharge between passes, for this pass's members only
+            # (a sat that failed mid-pass is dead: no recharge either)
+            for s in ring:
+                if s.alive:
+                    s.battery_j = clamp_battery(
+                        s.battery_j + cfg.recharge_w
+                        * self.budget.plane.pass_duration_s,
+                        cfg.battery_j)
+            rec.battery_j = sat.battery_j     # telemetry (device parity)
         return self.records
 
     def _run_pass(self, k: int, sat: SatelliteState) -> PassRecord:
@@ -295,7 +346,12 @@ class ConstellationSim:
         self._batch_idx += n_steps
 
         e = alloc.e_total
-        sat.battery_j -= (alloc.e_proc_sat + alloc.e_comm_down + alloc.e_isl)
+        # the one battery policy (shared with the device engine): charge
+        # floors at 0 — an overdrawn pass leaves the battery empty, the
+        # energy *accounting* still records the full eq.-(11) cost
+        sat.battery_j = clamp_battery(
+            sat.battery_j - (alloc.e_proc_sat + alloc.e_comm_down
+                             + alloc.e_isl), cfg.battery_j)
         sat.energy_spent_j += e
         sat.passes_served += 1
         self._handoff(k)
@@ -316,6 +372,105 @@ class ConstellationSim:
             from repro import ckpt
             ckpt.save_handoff(self.cfg.handoff_dir, k, self.state.params_a,
                               meta={"pass": k})
+
+    # ------------------------------------------------- device-engine bridge
+    def as_device_sim(self, n_revolutions: Optional[int] = None):
+        """This sim's steady-state closed loop as a device engine.
+
+        Preconditions (the device program is a *static* ring): no
+        join/leave events, ``fail_prob == 0``, no ``handoff_dir`` (those
+        are host-oracle features), and a *traceable* data provider —
+        ``data_for_sat`` must advertise ``traceable = True`` (e.g.
+        :class:`repro.sim.data.DeviceImageryShards`) because batches are
+        generated inside the jitted scan.  The engine takes over (and
+        consumes, via donation) the current train state on ``run``.
+        """
+        from repro.sim.device_sim import (DeviceConstellationSim,
+                                          DeviceSimConfig)
+
+        cfg = self.cfg
+        blockers = []
+        if cfg.join_events or cfg.leave_events:
+            blockers.append("elastic membership (join/leave events)")
+        if cfg.fail_prob:
+            blockers.append("random failures (fail_prob > 0)")
+        if cfg.handoff_dir is not None:
+            blockers.append("checkpoint handoffs (handoff_dir)")
+        if any(not s.alive for s in self.sats):
+            blockers.append("dead satellites in the ring")
+        if blockers:
+            raise ValueError(
+                "the device engine runs static steady-state rings only; "
+                "host-oracle features in use: " + ", ".join(blockers))
+        if not getattr(self.data_for_sat, "traceable", False):
+            raise ValueError(
+                "the device engine generates batches inside the jitted "
+                "scan: data_for_sat must be a traceable provider "
+                "(traceable = True, e.g. repro.sim.data."
+                "DeviceImageryShards), got "
+                f"{type(self.data_for_sat).__name__}")
+        n = len(self.sats)
+        if n_revolutions is None:
+            if cfg.n_passes % n:
+                raise ValueError(
+                    f"n_passes={cfg.n_passes} is not a whole number of "
+                    f"revolutions of the {n}-satellite ring")
+            n_revolutions = cfg.n_passes // n
+        dcfg = DeviceSimConfig(
+            n_revolutions=n_revolutions, lr=cfg.lr, optimizer=cfg.optimizer,
+            quantize_boundary=cfg.quantize_boundary,
+            battery_j=cfg.battery_j, recharge_w=cfg.recharge_w,
+            reserve_j=cfg.reserve_j,
+            max_steps_per_pass=cfg.max_steps_per_pass, seed=cfg.seed)
+        engine = DeviceConstellationSim(self.adapter, self.budget,
+                                        self.data_for_sat, dcfg,
+                                        state=self.state)
+        # carry the host fleet's charge AND the data cursor over (a
+        # fresh sim starts full at batch 0; a chained delegation resumes
+        # from the drained batteries and un-consumed samples)
+        engine.energy = engine.energy._replace(
+            battery_j=jnp.asarray([s.battery_j for s in self.sats],
+                                  jnp.float32))
+        engine._batch_idx = jnp.asarray(self._batch_idx, jnp.int32)
+        return engine
+
+    def run_device(self) -> List[PassRecord]:
+        """Delegate the whole run to the device engine, then fold its
+        telemetry back into host form (``records``, ``sats``, ``state``)
+        so ``summary()`` and downstream consumers see one consistent
+        view regardless of the engine."""
+        engine = self.as_device_sim()
+        self.device_engine = engine          # kept for inspection/tests
+        res = engine.run(stream_telemetry=True)
+        self.state = engine.state
+        self._batch_idx = int(np.asarray(engine._batch_idx))
+
+        plan = res.plan
+        from repro.sim.device_sim import ACTION_NAMES, ACTION_SKIPPED
+        k0 = len(self.records)
+        R, n = res.action.shape
+        for r in range(R):
+            for s in range(n):
+                skipped = res.action[r, s] == ACTION_SKIPPED
+                self.records.append(PassRecord(
+                    k0 + r * n + s, s, ACTION_NAMES[int(res.action[r, s])],
+                    loss=None if skipped else float(res.loss[r, s]),
+                    kept_fraction=1.0 if skipped
+                    else float(plan.kept_fraction[s]),
+                    e_total_j=0.0 if skipped else float(plan.e_total_j[s]),
+                    e_proc_j=0.0 if skipped else float(plan.e_proc_j[s]),
+                    e_comm_j=0.0 if skipped else float(plan.e_comm_j[s]),
+                    e_isl_j=0.0 if skipped else float(plan.e_isl_j[s]),
+                    t_total_s=0.0 if skipped else float(plan.t_total_s[s]),
+                    d_isl_bits=float(plan.d_isl_bits[s]),
+                    n_items=0.0 if skipped
+                    else float(plan.n_items_kept[s]),
+                    battery_j=float(res.battery_j[r, s])))
+        for s, host_sat in enumerate(self.sats):
+            host_sat.battery_j = float(res.energy.battery_j[s])
+            host_sat.passes_served += int(res.energy.passes_served[s])
+            host_sat.energy_spent_j += float(res.energy.energy_spent_j[s])
+        return self.records
 
     # ------------------------------------------------------------- reporting
     def summary(self) -> Dict[str, Any]:

@@ -32,6 +32,25 @@ from repro.core.linkbudget import ISLConfig, LinkConfig, PAPER_GS_LINK, PAPER_IS
 from repro.core.orbits import OrbitalPlane, PAPER_PLANE
 
 
+def clamp_battery(battery, capacity_j):
+    """THE battery clamp: charge lives in ``[0, capacity_j]``.
+
+    The single battery policy shared by the host scheduler
+    (:mod:`repro.core.constellation`, scalar floats — returns a plain
+    float) and the device constellation engine
+    (:mod:`repro.sim.energy_state`, ``(N,)`` arrays — returns an
+    array); every battery mutation in the repo routes through here.  A
+    pass whose allocation would overdraw the battery leaves it empty,
+    not negative (the energy *accounting* still records the full
+    eq.-(11) cost); solar recharge never exceeds capacity.
+    """
+    if isinstance(battery, (float, int)):
+        return min(max(float(battery), 0.0), float(capacity_j))
+    import jax.numpy as jnp
+
+    return jnp.clip(battery, 0.0, capacity_j)
+
+
 @dataclasses.dataclass(frozen=True)
 class SplitCosts:
     """The four orbit-aware cost terms of a split plan at one cut point.

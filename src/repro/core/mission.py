@@ -32,6 +32,14 @@ scenario grid — e.g. 1000-sat rings × every ``SplitCosts`` cut — is
 built, shed and solved as ONE jitted device program, and its outputs
 (kept item counts, allocations) feed the fused pass executor as device
 arrays, with no host transfer between planning and training.
+
+A swept grid also feeds *whole-revolution* execution:
+:meth:`RevolutionSweep.revolution_plan` broadcasts one planned cell
+over its ring into a :class:`~repro.sim.device_sim.DevicePassPlan`
+(per-slot step counts, battery drains, eq. (11)/(12) records) that the
+device constellation engine consumes directly — N masked fused passes
+per revolution with zero per-pass Python dispatch and the plan resident
+on device end to end.
 """
 from __future__ import annotations
 
@@ -195,6 +203,7 @@ class RevolutionSweep:
     ring_sizes: np.ndarray              # (R,) host metadata
     cut_names: Tuple[str, ...]          # (C,) host metadata
     n_items: np.ndarray                 # (B,) host metadata
+    d_isl_bits: np.ndarray              # (C,) host metadata (handoff bits)
     e_pass: Any                         # (R,C,B) eq. (11) per pass [J]
     t_pass: Any                         # (R,C,B) eq. (12) per pass [s]
     kept_fraction: Any                  # (R,C,B) shedding outcome
@@ -202,6 +211,8 @@ class RevolutionSweep:
     feasible: Any                       # (R,C,B) bool (post-shedding)
     kkt_residual: Any                   # (R,C,B)
     phase_times: Any                    # (R,C,B,4) canonical phase order
+    phase_energy: Any                   # (R,C,B,4) [J] same order
+    e_isl: Any                          # (R,C,B) constant E_ISL term [J]
     e_revolution: Any                   # (R,C,B) ring size × e_pass
     best_cut: Any                       # (R,B) argmin-energy cut; -1 if
                                         # no cut is feasible in that cell
@@ -226,12 +237,62 @@ class RevolutionSweep:
             steps = jnp.ceil(self.n_items_kept / float(batch_size))
             return jnp.maximum(steps, 1.0).astype(jnp.int32)
 
+    def revolution_plan(self, batch_size: int, *, ring: int = 0,
+                        cut: Optional[int] = None, budget: int = 0,
+                        max_steps_per_pass: Optional[int] = None):
+        """One planned grid cell as a whole-revolution execution plan.
+
+        Broadcasts cell ``(ring, cut, budget)`` over its ring's N slots
+        into a :class:`~repro.sim.device_sim.DevicePassPlan` — per-slot
+        fused step counts, battery drains and eq. (11)/(12) records as
+        float32/int32 device arrays — which
+        :class:`~repro.sim.device_sim.DeviceConstellationSim` executes
+        as N masked fused passes with zero per-pass Python dispatch.
+        This closes the plan→train bridge at *revolution* granularity:
+        a swept scenario grid feeds closed-loop execution directly,
+        without re-solving and without the plan ever visiting the host.
+
+        ``cut=None`` picks the cell's minimum-energy feasible cut
+        (``best_cut``; one host scalar read).  The cell's allocation is
+        identical for every slot — per-satellite heterogeneous plans
+        come from :func:`repro.sim.device_sim.plan_ring_passes` instead.
+        """
+        from repro.core import resource_opt_jax as roj
+        from repro.sim.device_sim import plan_from_report
+        import jax.numpy as jnp
+
+        n = int(self.ring_sizes[ring])
+        if cut is None:
+            cut = int(np.asarray(self.best_cut[ring, budget]))
+            if cut < 0:
+                raise ValueError(
+                    f"no feasible cut in sweep cell (ring={ring}, "
+                    f"budget={budget}); pass cut= explicitly to plan an "
+                    "infeasible allocation anyway")
+        sel = (ring, cut, budget)
+        with roj.x64_scope():
+            bcast = lambda a: jnp.broadcast_to(a[sel], (n,))   # noqa: E731
+            rep = roj.ArraySolveReport(
+                phase_times=jnp.broadcast_to(self.phase_times[sel], (n, 4)),
+                phase_energy=jnp.broadcast_to(self.phase_energy[sel],
+                                              (n, 4)),
+                lam=jnp.zeros((n,)), kkt_residual=bcast(self.kkt_residual),
+                feasible=bcast(self.feasible), e_isl=bcast(self.e_isl),
+                t_fixed=bcast(self.t_pass)
+                - jnp.broadcast_to(self.phase_times[sel], (n, 4)).sum(-1))
+            return plan_from_report(
+                rep, bcast(self.kept_fraction),
+                jnp.full((n,), float(self.n_items[budget])),
+                float(self.d_isl_bits[cut]), batch_size,
+                max_steps_per_pass)
+
     def to_host(self) -> Dict[str, np.ndarray]:
         """One explicit device→host sync of every result array."""
-        out = {"ring_sizes": self.ring_sizes, "n_items": self.n_items}
+        out = {"ring_sizes": self.ring_sizes, "n_items": self.n_items,
+               "d_isl_bits": self.d_isl_bits}
         for f in ("e_pass", "t_pass", "kept_fraction", "n_items_kept",
                   "feasible", "kkt_residual", "phase_times",
-                  "e_revolution", "best_cut"):
+                  "phase_energy", "e_isl", "e_revolution", "best_cut"):
             out[f] = np.asarray(getattr(self, f))
         return out
 
@@ -307,7 +368,10 @@ def sweep_revolutions(ring_sizes: Sequence[int],
             -1).astype(jnp.int32)
     return RevolutionSweep(
         ring_sizes=ring, cut_names=tuple(c.name for c in costs),
-        n_items=items, e_pass=e_pass, t_pass=t_pass, kept_fraction=frac,
+        n_items=items,
+        d_isl_bits=np.asarray(disl, dtype=np.float64),
+        e_pass=e_pass, t_pass=t_pass, kept_fraction=frac,
         n_items_kept=n_kept, feasible=rep.feasible,
         kkt_residual=rep.kkt_residual, phase_times=rep.phase_times,
+        phase_energy=rep.phase_energy, e_isl=rep.e_isl,
         e_revolution=e_rev, best_cut=best_cut)

@@ -468,13 +468,13 @@ def _resolve_backend(backend: Optional[str], n_instances: int) -> str:
     return backend
 
 
-def _gather_coeff_arrays(blist: Sequence[PassBudget],
-                         clist: Sequence[SplitCosts]) -> Dict[str, np.ndarray]:
-    """Per-instance coefficient arrays (cheap Python setup loop).
+def _gather_coeff_arrays_reference(
+        blist: Sequence[PassBudget],
+        clist: Sequence[SplitCosts]) -> Dict[str, np.ndarray]:
+    """Per-instance coefficient gather, one ``_phase_coeffs`` at a time.
 
-    The single host-side gather shared by the NumPy solver below and the
-    JAX backend (:mod:`repro.core.resource_opt_jax`), so both batch
-    paths consume identical float64 inputs.
+    The original O(B)-Python-objects loop, kept as the oracle the
+    vectorized :func:`_gather_coeff_arrays` is tested against.
     """
     B = len(blist)
     k = np.zeros((B, 2))          # [sat_proc, gs_proc]
@@ -497,6 +497,73 @@ def _gather_coeff_arrays(blist: Sequence[PassBudget],
         t_fixed[i] = b.fixed_overhead_s(c)
     return dict(k=k, tmin_p=tmin_p, cc=cc, tmin_c=tmin_c, gain=gain,
                 t_budget=t_budget, e_isl=e_isl, t_fixed=t_fixed)
+
+
+def _gather_coeff_arrays(blist: Sequence[PassBudget],
+                         clist: Sequence[SplitCosts]) -> Dict[str, np.ndarray]:
+    """Per-instance coefficient arrays, vectorized over the batch.
+
+    The single host-side gather shared by the NumPy solver below and the
+    JAX backend (:mod:`repro.core.resource_opt_jax`), so both batch
+    paths consume identical float64 inputs.  This used to be a Python
+    loop over ``_phase_coeffs`` that dominated full-call ``solve_batch``
+    at large B; now only the per-instance *scalars* (n_items and the
+    four cost terms) are pulled out of the dataclasses, the scenario
+    constants (orbit geometry, link budget, device DVFS constants) are
+    computed once per distinct (plane, link, isl, devices) tuple —
+    typically once per batch — and every coefficient is plain NumPy
+    array math, mirroring :func:`resource_opt_jax.ring_grid_coeffs`
+    element for element.
+    """
+    B = len(blist)
+    n = np.fromiter((b.n_items for b in blist), np.float64, B)
+    w1 = np.fromiter((c.w1_flops for c in clist), np.float64, B)
+    w2 = np.fromiter((c.w2_flops for c in clist), np.float64, B)
+    dtx = np.fromiter((c.dtx_bits for c in clist), np.float64, B)
+    disl = np.fromiter((c.d_isl_bits for c in clist), np.float64, B)
+
+    # scenario constants, one row per unique (plane, link, isl, devices)
+    scen_idx = np.empty(B, np.int64)
+    rows: Dict[Tuple, int] = {}
+    consts: List[Tuple[float, ...]] = []
+    for i, b in enumerate(blist):
+        key = (b.plane, b.link, b.isl, b.sat_device, b.gs_device)
+        j = rows.get(key)
+        if j is None:
+            j = rows[key] = len(consts)
+            d = b.plane.mean_slant_range_m()
+            sd, gd = b.sat_device, b.gs_device
+            nc_s = sd.n_cores * sd.flops_per_cycle
+            nc_g = gd.n_cores * gd.flops_per_cycle
+            consts.append((
+                b.link.channel_gain(d),
+                b.link.rate_bps(b.link.max_tx_power_w, d),
+                b.link.bandwidth_hz,
+                sd.power_max_w / sd.f_max_hz ** 3 / nc_s ** 3,
+                1.0 / (nc_s * sd.f_max_hz),
+                gd.power_max_w / gd.f_max_hz ** 3 / nc_g ** 3,
+                1.0 / (nc_g * gd.f_max_hz),
+                b.plane.pass_duration_s,
+                2.0 * b.plane.mean_prop_delay_s + b.plane.isl_prop_delay_s,
+                b.isl.rate_bps,
+                b.isl.tx_power_w,
+            ))
+        scen_idx[i] = j
+    (gain, r_max, bw, ksat_c, tsat_c, kgs_c, tgs_c, pass_s, prop_s,
+     isl_rate, isl_pw) = np.asarray(consts, np.float64)[scen_idx].T
+
+    k = np.stack([ksat_c * (n * w1) ** 3, kgs_c * (n * w2) ** 3], axis=1)
+    tmin_p = np.stack([tsat_c * n * w1, tgs_c * n * w2], axis=1)
+    bits = n * dtx                      # one-way boundary payload
+    c_comm = bits / bw
+    tmin_comm = np.where(bits > 0.0, bits / r_max, 0.0)
+    t_fixed = prop_s + disl / isl_rate
+    return dict(
+        k=k, tmin_p=tmin_p,
+        cc=np.stack([c_comm, c_comm], axis=1),
+        tmin_c=np.stack([tmin_comm, tmin_comm], axis=1),
+        gain=gain, t_budget=pass_s - t_fixed,
+        e_isl=isl_pw * disl / isl_rate, t_fixed=t_fixed)
 
 
 def solve_batch(budgets: Union[PassBudget, Sequence[PassBudget]],
@@ -705,13 +772,9 @@ def solve_with_shedding_batch(
     blist, clist = _broadcast_instances(budgets, costs)
     B = len(blist)
 
-    t_min_sum = np.zeros(B)
-    t_budget = np.zeros(B)
-    for i, (b, c) in enumerate(zip(blist, clist)):
-        cf = _phase_coeffs(b, c)
-        t_min_sum[i] = cf.t_min_sat + cf.t_min_down + cf.t_min_gs \
-            + cf.t_min_up
-        t_budget[i] = b.time_budget_s(c)
+    arrs = _gather_coeff_arrays(blist, clist)
+    t_min_sum = arrs["tmin_p"].sum(axis=1) + arrs["tmin_c"].sum(axis=1)
+    t_budget = arrs["t_budget"]
 
     # No live phase => solve() reports feasible regardless of budget.
     no_phase = t_min_sum == 0.0

@@ -523,6 +523,49 @@ def ring_grid_coeffs(sc: GridScalars, ring_sizes, w1, w2, dtx, disl,
         t_fixed=bcast(t_fixed))
 
 
+def ring_pass_coeffs(sc: GridScalars, n_sats: int, w1, w2, dtx, disl,
+                     n_items) -> CoeffArrays:
+    """One ring revolution's N problem-(13) instances as ``(N,)`` rows.
+
+    The per-*satellite* sibling of :func:`ring_grid_coeffs`: the ring
+    population ``n_sats`` is fixed (it enters through the ISL hop
+    distance, eq. 5) and every coefficient input may be a scalar
+    (broadcast ring-wide) or a ``(N,)`` array (per-satellite measured
+    boundary payloads, heterogeneous item budgets).  Pure array math, so
+    it traces inside the device constellation engine's jitted planning
+    call.  Run under :func:`x64_scope`.
+    """
+    from repro.core.orbits import C_LIGHT
+
+    shape = (int(n_sats),)
+    f64 = functools.partial(jnp.asarray, dtype=jnp.float64)
+    bcast = lambda a: jnp.broadcast_to(f64(a), shape)       # noqa: E731
+    w1, w2, dtx, disl = bcast(w1), bcast(w2), bcast(dtx), bcast(disl)
+    n = bcast(n_items)
+
+    isl_dist = 2.0 * sc.orbit_radius_m * jnp.sin(jnp.pi / float(n_sats))
+    t_fixed = (2.0 * sc.t_prop_s + disl / sc.isl_rate_bps
+               + isl_dist / C_LIGHT)
+    t_budget = sc.pass_duration_s - t_fixed
+    e_isl = sc.isl_tx_power_w * disl / sc.isl_rate_bps
+
+    k_sat = sc.sat_k_const * (n * w1) ** 3
+    k_gs = sc.gs_k_const * (n * w2) ** 3
+    tmin_sat = sc.sat_t_const * n * w1
+    tmin_gs = sc.gs_t_const * n * w2
+    bits = n * dtx
+    c_comm = bits / sc.bandwidth_hz
+    tmin_comm = jnp.where(bits > 0.0, bits / sc.r_max_bps, 0.0)
+
+    return CoeffArrays(
+        k=jnp.stack([k_sat, k_gs], axis=-1),
+        tmin_p=jnp.stack([tmin_sat, tmin_gs], axis=-1),
+        cc=jnp.stack([c_comm, c_comm], axis=-1),
+        tmin_c=jnp.stack([tmin_comm, tmin_comm], axis=-1),
+        gain=jnp.broadcast_to(sc.gain, shape),
+        t_budget=t_budget, e_isl=e_isl, t_fixed=t_fixed)
+
+
 @functools.lru_cache(maxsize=4)
 def _sweep_fn(min_fraction: float, tol: float, max_iters: int):
     """One jitted executable: grid build + shedding + solve, zero host."""

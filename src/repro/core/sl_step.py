@@ -181,6 +181,48 @@ def ring_boundary_bits(adapter: SplitAdapter, batches: Sequence[Dict],
 # The scan-fused pass engine.
 # --------------------------------------------------------------------------
 
+def make_pass_step(adapter: SplitAdapter, optimizer, *,
+                   quantize_boundary: bool = False):
+    """The shared masked SL step kernel: one traced train step.
+
+    ``pass_step(state, batch, valid) -> (new_state, loss)``
+
+    Runs one split-learning step (both grads + the optimizer update on
+    an :class:`~repro.core.train_state.SLTrainState`) and gates it on
+    ``valid``: an invalid step passes the whole carry through untouched
+    and reports NaN loss.  This is THE scan body of the repo — used by
+    :func:`make_sl_pass` (padded / planner-masked steps of one fused
+    pass) and by the device constellation engine
+    (:mod:`repro.sim.device_sim`, where skip-below-reserve passes and
+    beyond-allocation steps mask the same way) — so host and device
+    closed loops train through literally the same kernel.
+    """
+    sl_grads = _make_sl_grads(adapter, quantize_boundary)
+
+    def pass_step(state, batch, valid):
+        loss, g_a, g_b, _ = sl_grads(state.params_a, state.params_b, batch)
+        state = state.apply_updates(g_a, g_b, optimizer, where=valid)
+        return state, jnp.where(valid, loss, jnp.nan)
+
+    return pass_step
+
+
+def dedupe_state_buffers(state):
+    """Copy leaves that alias the same buffer (e.g. a tied LM embedding
+    shared between segments A and B): XLA rejects donating one buffer
+    twice, and the segments diverge after the first update anyway.
+    Shared by every donating engine (fused pass, device sim)."""
+    seen = set()
+
+    def uniq(x):
+        if id(x) in seen:
+            return jnp.copy(x)
+        seen.add(id(x))
+        return x
+
+    return jax.tree.map(uniq, state)
+
+
 @dataclasses.dataclass
 class SLPassResult:
     """One whole pass: k fused SL steps + optimizer updates, as a state.
@@ -258,37 +300,20 @@ def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
     from repro.train.optimizer import resolve_optimizer
 
     opt = resolve_optimizer(optimizer, lr=lr, grad_clip=grad_clip)
-    sl_grads = _make_sl_grads(adapter, quantize_boundary)
+    # padded steps leave the whole carry (params, opt, step) untouched —
+    # the masking lives inside the shared kernel (make_pass_step)
+    step_kernel = make_pass_step(adapter, opt,
+                                 quantize_boundary=quantize_boundary)
     measure_payload = make_boundary_meter(adapter, quantize_boundary)
 
     def one_step(state, xs):
         batch, valid = xs
-        loss, g_a, g_b, _ = sl_grads(state.params_a, state.params_b, batch)
-        new = state.apply_updates(g_a, g_b, opt)
-        # padded steps leave the whole carry (params, opt, step) untouched
-        state = jax.tree.map(lambda n_, o_: jnp.where(valid, n_, o_),
-                             new, state)
-        return state, jnp.where(valid, loss, jnp.nan)
+        return step_kernel(state, batch, valid)
 
     def scan_pass(state, batches, valid):
         return jax.lax.scan(one_step, state, (batches, valid))
 
     jitted = jax.jit(scan_pass, donate_argnums=(0,) if donate else ())
-
-    def _dedupe_buffers(state):
-        """Copy leaves that alias the same buffer (e.g. a tied LM
-        embedding shared between segments A and B): XLA rejects donating
-        one buffer twice, and the segments diverge after the first
-        update anyway."""
-        seen = set()
-
-        def uniq(x):
-            if id(x) in seen:
-                return jnp.copy(x)
-            seen.add(id(x))
-            return x
-
-        return jax.tree.map(uniq, state)
 
     def run_state(state, batches: Union[Sequence[Dict], Dict],
                   n_valid=None) -> SLPassResult:
@@ -341,7 +366,7 @@ def make_sl_pass(adapter: SplitAdapter, *, quantize_boundary: bool = False,
             # the comparison runs on device — no host sync of the plan
             valid = jnp.arange(kb) < jnp.minimum(
                 jnp.asarray(n_valid, jnp.int32), k)
-        call_state = _dedupe_buffers(state) if donate else state
+        call_state = dedupe_state_buffers(state) if donate else state
         new_state, losses = jitted(call_state, batches, valid)
         if donate:
             state.mark_consumed()

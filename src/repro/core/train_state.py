@@ -98,13 +98,27 @@ class SLTrainState:
         self._require_live("replace")
         return dataclasses.replace(self, **kw)
 
-    def apply_updates(self, grads_a, grads_b, optimizer) -> "SLTrainState":
-        """One optimizer step on both segments; returns the new state."""
+    def apply_updates(self, grads_a, grads_b, optimizer,
+                      where=None) -> "SLTrainState":
+        """One optimizer step on both segments; returns the new state.
+
+        ``where`` (a boolean scalar, traceable) masks the update: where
+        False the returned state equals this one leaf-for-leaf (params,
+        optimizer state AND step counter untouched).  This is the carry
+        passthrough every masked scan in the repo uses — the fused pass
+        engine's padded steps and the device constellation engine's
+        skip-below-reserve / beyond-allocation steps all gate the same
+        way, so masking semantics live in exactly one place.
+        """
         self._require_live("apply_updates")
         pa, oa, _ = optimizer.update(grads_a, self.opt_a, self.params_a)
         pb, ob, _ = optimizer.update(grads_b, self.opt_b, self.params_b)
-        return SLTrainState(params_a=pa, params_b=pb, opt_a=oa, opt_b=ob,
-                            step=self.step + 1)
+        new = SLTrainState(params_a=pa, params_b=pb, opt_a=oa, opt_b=ob,
+                           step=self.step + 1)
+        if where is None:
+            return new
+        return jax.tree.map(lambda n_, o_: jnp.where(where, n_, o_),
+                            new, self)
 
     def as_tuple(self) -> Tuple[Any, Any, Any, Any]:
         """Legacy 4-tuple view (old ``make_sl_pass`` argument order)."""

@@ -1,0 +1,25 @@
+"""Device-resident constellation simulation.
+
+Layering: the host :class:`~repro.core.constellation.ConstellationSim`
+is the feature-complete *oracle* (elastic membership, random failures,
+checkpoint handoffs, arbitrary Python data providers); this package is
+the *engine* — the steady-state closed loop (orbit plan → energy policy
+→ fused SL passes → recharge) compiled into one jitted scan for
+constellation-scale studies.  ``ConstellationSim.run(engine="device")``
+bridges the two.
+"""
+from repro.sim.data import DeviceImageryShards
+from repro.sim.device_sim import (ACTION_NAMES, ACTION_SHED,
+                                  ACTION_SKIPPED, ACTION_TRAINED,
+                                  DeviceConstellationSim, DevicePassPlan,
+                                  DeviceSimConfig, DeviceSimResult,
+                                  plan_ring_passes)
+from repro.sim.energy_state import (EnergyState, clamp_battery,
+                                    init_energy_state)
+
+__all__ = [
+    "ACTION_NAMES", "ACTION_SHED", "ACTION_SKIPPED", "ACTION_TRAINED",
+    "DeviceConstellationSim", "DeviceImageryShards", "DevicePassPlan",
+    "DeviceSimConfig", "DeviceSimResult", "EnergyState", "clamp_battery",
+    "init_energy_state", "plan_ring_passes",
+]

@@ -1,0 +1,86 @@
+"""Traceable data providers for the device-resident constellation engine.
+
+The host scheduler consumes batches through an arbitrary Python callback
+(``data_for_sat(sat_id, batch_idx) -> batch``); the device engine needs
+the same interface as a *traced* function so batch generation happens
+inside the jitted (revolution × ring-slot) scan — no host data transfers
+between passes, and a 1000-sat × many-revolution run never materializes
+its dataset.
+
+:class:`DeviceImageryShards` is the ``jax.random`` twin of
+:class:`repro.data.synthetic.ImageryShards`: per-satellite non-IID class
+priors (Dirichlet tilt), gaussian-blob "imagery", everything derived
+from ``fold_in(seed, sat, idx)`` so a batch is a pure function of its
+indices.  Crucially the SAME object also serves as a host
+``data_for_sat`` (``batch_at`` just calls the traced function eagerly),
+which is what makes bit-identical host-vs-device closed-loop parity
+tests possible: both engines train on exactly the same samples.
+
+Providers advertise ``traceable = True``;
+``ConstellationSim.run(engine="device")`` checks this flag before
+delegating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceImageryShards:
+    """Non-IID synthetic imagery as a traceable ``(sat, idx) -> batch``.
+
+    Returns ``{"images": (batch, img, img, channels) f32,
+    "labels": (batch,) i32}`` — the same contract as
+    ``ImageryShards.batch_at``, usable by the autoencoder and ResNet
+    split adapters.  ``__call__`` composes under ``jit``/``scan`` with
+    traced ``sat``/``idx``; :meth:`batch_at` is the eager host view of
+    the identical function.
+    """
+
+    img: int = 32
+    channels: int = 3
+    n_classes: int = 10
+    batch: int = 4
+    seed: int = 0
+
+    traceable = True
+
+    def __call__(self, sat, idx) -> Dict[str, jnp.ndarray]:
+        sat = jnp.asarray(sat, jnp.uint32)
+        idx = jnp.asarray(idx, jnp.uint32)
+        kshard = jax.random.fold_in(jax.random.key(self.seed), sat)
+        # per-satellite class-prior tilt => genuinely non-IID shards
+        prior = jax.random.dirichlet(kshard,
+                                     jnp.full((self.n_classes,), 0.5))
+        klab, kimg = jax.random.split(jax.random.fold_in(kshard, idx))
+        labels = jax.random.categorical(
+            klab, jnp.log(prior + 1e-9), shape=(self.batch,)
+        ).astype(jnp.int32)
+
+        xs = jnp.linspace(-1.0, 1.0, self.img, dtype=jnp.float32)
+        xx, yy = jnp.meshgrid(xs, xs)
+
+        def one(key, lab):
+            kc, kn = jax.random.split(key)
+            cxy = jax.random.uniform(kc, (2,), minval=-0.5, maxval=0.5)
+            sx = 0.15 + 0.04 * (lab % 5).astype(jnp.float32)
+            blob = jnp.exp(-(((xx - cxy[0]) ** 2 + (yy - cxy[1]) ** 2)
+                             / (2.0 * sx * sx)))
+            phase = 2.0 * jnp.pi * lab.astype(jnp.float32) / self.n_classes
+            chans = jnp.stack(
+                [blob * jnp.cos(phase + c) for c in range(self.channels)],
+                axis=-1)
+            noise = jax.random.normal(
+                kn, (self.img, self.img, self.channels))
+            return (chans + 0.05 * noise).astype(jnp.float32)
+
+        imgs = jax.vmap(one)(jax.random.split(kimg, self.batch), labels)
+        return {"images": imgs, "labels": labels}
+
+    def batch_at(self, sat: int, idx: int) -> Dict[str, jnp.ndarray]:
+        """Host-eager view of the same pure function (for the host sim)."""
+        return self(sat, idx)

@@ -1,0 +1,90 @@
+"""Per-satellite energy state as device arrays — the sim carry's battery.
+
+The host :class:`~repro.core.constellation.ConstellationSim` keeps one
+Python ``SatelliteState`` object per satellite; the device engine
+(:mod:`repro.sim.device_sim`) keeps the same bookkeeping as a single
+:class:`EnergyState` of ``(N,)`` arrays riding a ``lax.scan`` carry, so
+battery drain, solar recharge and the reserve-skip policy execute on the
+accelerator with zero host round-trips.
+
+Array layout (all shape ``(N,)``, indexed by ring slot = satellite id):
+
+* ``battery_j``       float32 — charge, clamped to ``[0, capacity]``;
+* ``energy_spent_j``  float32 — cumulative eq. (11) energy of served
+  passes (satellite + ground + ISL, matching the host sim's
+  ``SatelliteState.energy_spent_j``);
+* ``passes_served``   int32   — trained (incl. shed) pass count;
+* ``passes_skipped``  int32   — reserve-policy skips.
+
+Battery clamping policy lives in exactly ONE place —
+:func:`repro.core.energy.clamp_battery` (re-exported here) — shared by
+the host scheduler (scalar floats) and the device engine (arrays):
+charge never exceeds the battery capacity and never goes below zero (a
+pass whose allocation would overdraw the battery leaves it empty, not
+negative; the energy *accounting* still records the full eq.-(11)
+cost).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core.energy import clamp_battery
+
+
+class EnergyState(NamedTuple):
+    """Constellation-wide battery/serving counters as ``(N,)`` arrays."""
+
+    battery_j: Any
+    energy_spent_j: Any
+    passes_served: Any
+    passes_skipped: Any
+
+    @property
+    def n_sats(self) -> int:
+        return self.battery_j.shape[0]
+
+
+def init_energy_state(n_sats: int, battery_j: float) -> EnergyState:
+    """Fresh fleet: full batteries, zero counters."""
+    return EnergyState(
+        battery_j=jnp.full((n_sats,), battery_j, jnp.float32),
+        energy_spent_j=jnp.zeros((n_sats,), jnp.float32),
+        passes_served=jnp.zeros((n_sats,), jnp.int32),
+        passes_skipped=jnp.zeros((n_sats,), jnp.int32))
+
+
+def recharge(state: EnergyState, energy_j, capacity_j,
+             member_mask: Optional[Any] = None) -> EnergyState:
+    """Solar recharge between passes, clamped at capacity.
+
+    ``member_mask`` (bool ``(N,)``) limits recharge to the satellites
+    that were ring members during the pass; None recharges the whole
+    (static) ring — the device engine's case.
+    """
+    gain = energy_j if member_mask is None else \
+        jnp.where(member_mask, energy_j, 0.0)
+    return state._replace(
+        battery_j=clamp_battery(state.battery_j + gain, capacity_j))
+
+
+def apply_pass(state: EnergyState, sat, drain_j, e_total_j, capacity_j,
+               trained) -> EnergyState:
+    """Account one pass for satellite ``sat`` (all args traceable).
+
+    ``trained`` (bool scalar) gates everything: a reserve-policy skip
+    drains nothing and bumps ``passes_skipped`` instead.  ``drain_j`` is
+    the satellite-side battery draw (E_proc^sat + E_comm^down + E_ISL —
+    what the host sim subtracts), ``e_total_j`` the full eq.-(11) cost
+    recorded in ``energy_spent_j``.
+    """
+    t = jnp.asarray(trained)
+    f = t.astype(jnp.float32)
+    battery = state.battery_j.at[sat].add(-drain_j * f)
+    return EnergyState(
+        battery_j=clamp_battery(battery, capacity_j),
+        energy_spent_j=state.energy_spent_j.at[sat].add(e_total_j * f),
+        passes_served=state.passes_served.at[sat].add(t.astype(jnp.int32)),
+        passes_skipped=state.passes_skipped.at[sat].add(
+            (~t).astype(jnp.int32)))

@@ -1,0 +1,248 @@
+"""Device-resident constellation engine: host-vs-device closed-loop
+parity (pass records, skip decisions, battery trajectories, losses),
+swept-plan execution, and the zero-per-pass-host-transfer contract."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.constellation import ConstellationConfig, ConstellationSim
+from repro.core.energy import PassBudget
+from repro.core.orbits import OrbitalPlane
+from repro.core.sl_step import autoencoder_adapter
+from repro.sim.data import DeviceImageryShards
+from repro.sim.device_sim import (ACTION_TRAINED, DeviceConstellationSim,
+                                  DeviceSimConfig, plan_ring_passes)
+
+SHARDS = DeviceImageryShards(img=32, batch=4)
+ADAPTER = autoencoder_adapter(cut=5, img=32)
+
+
+def _budget(n_sats=4, n_items=16.0):
+    return PassBudget(plane=OrbitalPlane(n_sats=n_sats), n_items=n_items)
+
+
+def _pair(budget, **cfg_kw):
+    """Two identically-configured sims sharing the traceable provider."""
+    def make():
+        return ConstellationSim(ADAPTER, budget, SHARDS,
+                                ConstellationConfig(batch_size=4, **cfg_kw))
+    return make(), make()
+
+
+def _assert_record_parity(host_recs, dev_recs, *, loss_rtol=2e-4,
+                          e_rtol=1e-5):
+    """``e_rtol`` loosens for shed scenarios: the host bisects the kept
+    fraction to 1e-4 while the device uses the closed form, and energy
+    scales ~cubically in the kept item count."""
+    assert [r.action for r in host_recs] == [r.action for r in dev_recs]
+    assert [r.sat_id for r in host_recs] == [r.sat_id for r in dev_recs]
+    for h, d in zip(host_recs, dev_recs):
+        if h.loss is None:
+            assert d.loss is None
+        else:
+            np.testing.assert_allclose(d.loss, h.loss, rtol=loss_rtol,
+                                       atol=1e-5)
+        np.testing.assert_allclose(d.battery_j, h.battery_j, rtol=1e-5,
+                                   atol=0.05)
+        np.testing.assert_allclose(d.e_total_j, h.e_total_j, rtol=e_rtol,
+                                   atol=1e-9)
+        np.testing.assert_allclose(d.kept_fraction, h.kept_fraction,
+                                   rtol=5e-4)
+        np.testing.assert_allclose(d.d_isl_bits, h.d_isl_bits, rtol=1e-6)
+
+
+def test_closed_loop_parity_with_energy_skips():
+    """3 revolutions on a 4-sat ring where the ~48 J/pass satellite drain
+    pushes batteries below reserve: action sequence (incl. every
+    skip-below-reserve decision), battery trajectories, per-pass losses
+    and the energy summary must match the host oracle within float32
+    tolerance."""
+    budget = _budget(n_items=4e6)
+    host, dev = _pair(budget, n_passes=12, battery_j=200.0,
+                      recharge_w=0.01, reserve_j=150.0,
+                      max_steps_per_pass=4)
+    host.run()
+    dev.run(engine="device")
+
+    assert len(dev.records) == 12
+    actions = [r.action for r in host.records]
+    assert "trained" in actions and "skipped_energy" in actions
+    _assert_record_parity(host.records, dev.records)
+
+    hs, ds = host.summary(), dev.summary()
+    assert ds["trained"] == hs["trained"]
+    assert ds["skipped"] == hs["skipped"] > 0
+    np.testing.assert_allclose(ds["loss_last"], hs["loss_last"],
+                               rtol=2e-4, atol=1e-5)
+    for key in ("E_total_J", "E_comm_J", "E_proc_J", "E_isl_J"):
+        np.testing.assert_allclose(ds[key], hs[key], rtol=1e-5)
+    # fleet state folded back onto the host SatelliteStates
+    for hsat, dsat in zip(host.sats, dev.sats):
+        np.testing.assert_allclose(dsat.battery_j, hsat.battery_j,
+                                   rtol=1e-5, atol=0.05)
+        assert dsat.passes_served == hsat.passes_served
+
+
+def test_loss_parity_two_clean_revolutions():
+    """No skips, no shedding: pure training parity over >=2 revolutions
+    (same samples, same shared step kernel, same optimizer updates)."""
+    host, dev = _pair(_budget(), n_passes=8, max_steps_per_pass=8)
+    host.run()
+    dev.run(engine="device")
+    _assert_record_parity(host.records, dev.records)
+    hl = np.array([r.loss for r in host.records])
+    assert hl[-1] < hl[0]          # still actually learning
+    eng = dev.device_engine
+    assert eng.traces == 1
+    assert eng.host_syncs <= 2     # <= one per revolution
+
+
+def test_shedding_parity():
+    """Infeasible budgets shed on both engines: same action, kept
+    fraction within the host bisection tolerance."""
+    host, dev = _pair(_budget(n_items=4e7), n_passes=4,
+                      max_steps_per_pass=4)
+    host.run()
+    dev.run(engine="device")
+    assert all(r.action == "shed" for r in host.records)
+    _assert_record_parity(host.records, dev.records, e_rtol=2e-3)
+
+
+def test_streamed_telemetry_one_sync_per_revolution():
+    budget = _budget()
+    eng = DeviceConstellationSim(
+        ADAPTER, budget, SHARDS,
+        DeviceSimConfig(n_revolutions=3, max_steps_per_pass=4))
+    res = eng.run(stream_telemetry=True)
+    assert res.action.shape == (3, 4)
+    assert eng.traces == 1         # one revolution program, reused
+    assert eng.device_calls == 3
+    assert eng.host_syncs == 3     # exactly one per revolution
+    # chaining: a further run reuses the same trace and the train state
+    res2 = eng.run(1, stream_telemetry=True)
+    assert eng.traces == 1
+    assert np.isfinite(res2.loss).all()
+    # training continued from where the first run stopped
+    assert res2.loss[0, 0] < res.loss[-1, -1]
+
+
+def test_engine_plan_matches_host_planner():
+    """The engine's on-device plan equals the host RevolutionPlanner's
+    batched solve for the same measured costs."""
+    budget = _budget(n_items=400.0)
+    host = ConstellationSim(ADAPTER, budget, SHARDS,
+                            ConstellationConfig(batch_size=4, n_passes=1))
+    host.run()                     # populates planner with measured costs
+    entry = host.planner.entry_for(
+        0, [0, 1, 2, 3], budget,
+        [host._costs_for(s) for s in range(4)])
+    eng = host.as_device_sim(n_revolutions=1)
+    plan = eng.plan
+    alloc = entry.shed.report.allocation
+    np.testing.assert_allclose(
+        np.asarray(plan.e_total_j)[0], alloc.e_total, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(plan.drain_j)[0],
+        alloc.e_proc_sat + alloc.e_comm_down + alloc.e_isl, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(plan.t_total_s)[0], alloc.t_total, rtol=1e-5)
+
+
+def test_sweep_cell_feeds_whole_revolution():
+    """A planned (ring x cut x budget) grid cell broadcasts into a
+    DevicePassPlan identical to the engine's own plan and drives a full
+    closed-loop revolution (ROADMAP: planned grids feed whole-revolution
+    execution)."""
+    from repro.core.mission import sweep_revolutions
+
+    budget = _budget()
+    eng = DeviceConstellationSim(ADAPTER, budget, SHARDS,
+                                 DeviceSimConfig(max_steps_per_pass=8))
+    sweep = sweep_revolutions([4], [eng.costs], [16.0], budget=budget)
+    plan = sweep.revolution_plan(batch_size=4, cut=0,
+                                 max_steps_per_pass=8)
+    for field in plan._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(plan, field)),
+            np.asarray(getattr(eng.plan, field)),
+            rtol=1e-6, atol=1e-12, err_msg=field)
+    eng2 = DeviceConstellationSim(ADAPTER, budget, SHARDS,
+                                  DeviceSimConfig(max_steps_per_pass=8),
+                                  plan=plan)
+    res = eng2.run()
+    assert (res.action == ACTION_TRAINED).all()
+    assert np.isfinite(res.loss).all()
+
+
+def test_delegation_guards():
+    budget = _budget()
+    sim = ConstellationSim(ADAPTER, budget, SHARDS,
+                           ConstellationConfig(n_passes=8, fail_prob=0.5))
+    with pytest.raises(ValueError, match="random failures"):
+        sim.run(engine="device")
+    sim = ConstellationSim(ADAPTER, budget, SHARDS,
+                           ConstellationConfig(n_passes=8,
+                                               join_events={2: 1}))
+    with pytest.raises(ValueError, match="elastic membership"):
+        sim.run(engine="device")
+    sim = ConstellationSim(ADAPTER, budget, lambda s, i: SHARDS(s, i),
+                           ConstellationConfig(n_passes=8))
+    with pytest.raises(ValueError, match="traceable"):
+        sim.run(engine="device")
+    sim = ConstellationSim(ADAPTER, budget, SHARDS,
+                           ConstellationConfig(n_passes=7))
+    with pytest.raises(ValueError, match="whole number of revolutions"):
+        sim.run(engine="device")
+    with pytest.raises(ValueError, match="unknown engine"):
+        sim.run(engine="tpu")
+
+
+def test_1000_sat_revolution_no_per_pass_host_transfers():
+    """The scale target: a 1000-satellite ring runs a full closed-loop
+    revolution (planning + masked fused passes + battery/recharge/skip
+    policy) as ONE compiled program — one jit trace, one dispatch, one
+    telemetry sync; no per-pass host boundary crossings."""
+    shards = DeviceImageryShards(img=32, batch=2)
+    budget = PassBudget(plane=OrbitalPlane(n_sats=1000), n_items=2.0)
+    eng = DeviceConstellationSim(
+        ADAPTER, budget, shards,
+        DeviceSimConfig(n_revolutions=1, max_steps_per_pass=1))
+    assert int(np.asarray(eng.plan.n_steps).max()) == 1
+    res = eng.run()
+    assert eng.traces == 1          # the whole loop compiled once
+    assert eng.device_calls == 1    # ... dispatched once
+    assert eng.host_syncs == 1      # ... synced once (telemetry)
+    assert res.action.shape == (1, 1000)
+    assert (res.action == ACTION_TRAINED).all()
+    assert np.isfinite(res.loss).all()
+    assert (res.energy.passes_served == 1).all()
+    assert (res.energy.battery_j >= 0).all()
+    # the train state advanced exactly 1000 fused steps, all on device
+    assert int(np.asarray(res.state.step)) == 1000
+
+
+def test_plan_ring_passes_per_sat_heterogeneous():
+    """Per-satellite measured payloads plan as (N,) instances."""
+    budget = _budget()
+    costs = ADAPTER.costs()
+    costs = dataclasses.replace(costs, d_isl_bits=1e6)
+    dtx = np.array([1e4, 2e4, 3e4, 4e4])
+    plan = plan_ring_passes(budget, costs, batch_size=4, dtx_bits=dtx,
+                            max_steps_per_pass=8)
+    e = np.asarray(plan.e_total_j)
+    assert e.shape == (4,)
+    assert (np.diff(e) > 0).all()   # heavier payloads cost more energy
+
+
+def test_chained_delegation_resumes_data_cursor():
+    """Two chained device runs equal one long host run: the engine
+    inherits the host's batch index and folds it back, so no satellite
+    ever retrains on samples it already consumed."""
+    host, dev = _pair(_budget(), n_passes=8, max_steps_per_pass=8)
+    host.run()
+    dev.cfg.n_passes = 4
+    dev.run(engine="device")
+    dev.run(engine="device")
+    assert dev._batch_idx == host._batch_idx
+    _assert_record_parity(host.records, dev.records)

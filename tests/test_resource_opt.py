@@ -146,3 +146,30 @@ def test_quasiconvexity_along_boundary_scaling():
         e = solve(BUDGET, c).allocation.e_total
         assert e >= e_prev - 1e-12
         e_prev = e
+
+
+def test_gather_coeff_arrays_vectorized_parity():
+    """The vectorized coefficient gather equals the per-instance
+    reference loop bit-for-bit across mixed scenarios (different planes
+    => different geometry constants) and heterogeneous costs."""
+    from repro.core.orbits import OrbitalPlane
+    from repro.core.resource_opt import (_gather_coeff_arrays,
+                                         _gather_coeff_arrays_reference)
+
+    rng = np.random.default_rng(0)
+    planes = [OrbitalPlane(n_sats=n) for n in (10, 25, 400)]
+    blist, clist = [], []
+    for i in range(96):
+        blist.append(PassBudget(plane=planes[i % len(planes)],
+                                n_items=float(rng.uniform(1, 5e4))))
+        clist.append(SplitCosts(
+            w1_flops=float(rng.uniform(0, 1e12)),
+            w2_flops=float(rng.uniform(1e6, 1e12)),
+            dtx_bits=float(rng.choice([0.0, rng.uniform(1e2, 1e9)])),
+            d_isl_bits=float(rng.uniform(0, 1e9))))
+    ref = _gather_coeff_arrays_reference(blist, clist)
+    vec = _gather_coeff_arrays(blist, clist)
+    assert set(vec) == set(ref)
+    for key in ref:
+        np.testing.assert_allclose(vec[key], ref[key], rtol=1e-13, atol=0.0,
+                                   err_msg=key)
