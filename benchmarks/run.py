@@ -382,6 +382,105 @@ def device_sim_benchmarks(quick: bool = False):
     return out
 
 
+def fleet_benchmarks(quick: bool = False):
+    """Sharded fleet rows: the P-plane elastic engine
+    (``repro.fleet.FleetEngine`` — one jitted scan, vmapped over planes,
+    plane axis sharded over the host mesh, inter-plane checkpoint
+    averaging every revolution) vs the *per-plane loop* of P single-ring
+    device engines with explicit averaging between revolutions.  Quick
+    mode runs a 2x16 fleet; full mode the 2x64 and 4x256 fleets the
+    ISSUE targets.  Parity (action sequences + losses vs the per-plane
+    reference) is asserted per row.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.energy import PassBudget
+    from repro.core.orbits import OrbitalPlane
+    from repro.core.sl_step import autoencoder_adapter
+    from repro.core.train_state import SLTrainState
+    from repro.fleet import FleetConfig, FleetEngine, average_planes
+    from repro.sim.data import DeviceImageryShards
+    from repro.sim.device_sim import (DeviceConstellationSim,
+                                      DeviceSimConfig)
+    from repro.train.optimizer import resolve_optimizer
+
+    print("== fleet benchmarks (P-plane sharded engine vs per-plane "
+          "loop) ==")
+    print("name,us_per_call,derived")
+    out = {}
+    shards = DeviceImageryShards(img=32, batch=2)
+    adapter = autoencoder_adapter(cut=5, img=32)
+    energy = dict(battery_j=200.0, recharge_w=1e-4, reserve_j=150.0,
+                  max_steps_per_pass=1, seed=0)
+    scenarios = [(2, 16, 2)] if quick else [(2, 64, 2), (4, 256, 1)]
+    for P, N, R in scenarios:
+        budget = PassBudget(plane=OrbitalPlane(n_sats=N), n_items=4e6)
+        cfg = FleetConfig(n_planes=P, n_revolutions=R, avg_every=1,
+                          **energy)
+
+        def fleet_run():
+            eng = FleetEngine(adapter, budget, shards, cfg)
+            return eng, eng.run()
+
+        us_cold, (eng, res) = _timeit(fleet_run, n=1, warmup=0)
+        cold_syncs = eng.host_syncs           # before the warm re-run
+        us_warm, _ = _timeit(eng.run, n=1, warmup=0)
+        M = eng.n_slots
+
+        # the pre-fleet workflow: P independent single-ring engines,
+        # checkpoints averaged on the host loop between revolutions
+        opt = resolve_optimizer("sgd", lr=cfg.lr)
+        init = SLTrainState.create(*adapter.init(jax.random.key(0)), opt)
+
+        def plane_loop():
+            engines = [DeviceConstellationSim(
+                adapter, budget, lambda s, i, p=p: shards(p * M + s, i),
+                DeviceSimConfig(**energy),
+                state=jax.tree.map(jnp.copy, init)) for p in range(P)]
+            acts, losses = [], []
+            for _ in range(R):
+                rr = [e.run(1, stream_telemetry=True) for e in engines]
+                acts.append(np.stack([r.action[0] for r in rr]))
+                losses.append(np.stack([r.loss[0] for r in rr]))
+                avg = average_planes(jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[e.state for e in engines]))
+                for p, e in enumerate(engines):
+                    e.state = jax.tree.map(lambda x: x[p], avg)
+            return np.concatenate(acts, 1), np.concatenate(losses, 1)
+
+        us_ref, (ref_act, ref_loss) = _timeit(plane_loop, n=1, warmup=0)
+        parity = bool((res.action == ref_act).all()
+                      and np.allclose(np.nan_to_num(res.loss),
+                                      np.nan_to_num(ref_loss),
+                                      rtol=2e-4, atol=2e-5))
+        assert parity, (f"fleet/per-plane divergence at {P}x{N}: "
+                        f"{res.summary()}")
+        n_passes = P * R * N
+        name = f"closed_loop_fleet_{P}x{N}"
+        # both cold rows are end-to-end incl. construction + compiles
+        # (the reference pays P of them); the warm row re-dispatches the
+        # SAME fleet program — the steady-state per-revolution cost
+        out[name] = dict(
+            us=us_cold, n_passes=n_passes, n_planes=P,
+            us_per_pass=us_cold / n_passes, parity_vs_plane_loop=parity,
+            speedup_vs_plane_loop=us_ref / us_cold,
+            host_syncs=cold_syncs)
+        out[f"{name}_warm"] = dict(us=us_warm, n_passes=n_passes,
+                                   us_per_pass=us_warm / n_passes)
+        out[f"closed_loop_plane_loop_{P}x{N}"] = dict(us=us_ref,
+                                                      n_passes=n_passes)
+        print(f"{name},{us_cold:.0f},"
+              f"{us_ref / us_cold:.1f}x-vs-per-plane-loop-cold,"
+              f"parity={parity}")
+        print(f"{name}_warm,{us_warm:.0f},"
+              f"{us_warm / n_passes:.0f}us/pass-post-compile")
+        print(f"closed_loop_plane_loop_{P}x{N},{us_ref:.0f},"
+              f"{P}-engines-host-averaged-cold")
+    return out
+
+
 def micro_benchmarks():
     """us/call for the SL step + each kernel's jnp path (CPU; the numbers
     are for regression tracking, not TPU performance claims)."""
@@ -525,6 +624,7 @@ def main(argv=None) -> None:
     results["solver_backend"] = solver_backend_benchmarks(quick=args.quick)
     results["sweep"] = sweep_benchmarks(quick=args.quick)
     results["device_sim"] = device_sim_benchmarks(quick=args.quick)
+    results["fleet"] = fleet_benchmarks(quick=args.quick)
     results["micro"] = micro_benchmarks()
     rev = _git_rev()
     results["meta"] = {"rev": rev, "wall_s": time.time() - t0,

@@ -1,6 +1,6 @@
 """Constellation-scale closed loop, resident on the accelerator.
 
-A 1000-satellite ring trains the split autoencoder for 8 full
+Default: a 1000-satellite ring trains the split autoencoder for 8 full
 revolutions — 8000 passes of [problem-(13) allocation -> reserve-skip
 policy -> masked fused SL steps -> battery drain -> solar recharge] —
 with the WHOLE loop compiled as one jitted (revolution × ring-slot)
@@ -8,34 +8,52 @@ scan: batches are generated inside the scan, the plan never leaves the
 device, and the host hears from the constellation exactly once per
 revolution (energy telemetry).
 
+With ``--planes P`` the same scenario runs as a P-plane *fleet*
+(:mod:`repro.fleet`): every plane is its own ring, the (P, N) energy
+state and pass plan shard over the plane axis of a device mesh, and the
+segment checkpoints are averaged across planes at each revolution
+boundary (the paper's inter-plane ISL exchange).  Either way the mesh /
+device layout the run actually used is printed.
+
 The per-pass item budget is scaled so a pass drains ~48 J against 200 J
 batteries with slow solar recharge: satellites visibly cycle between
 training and reserve-policy skips across revolutions — the paper's
 energy-constrained regime, at a scale the host scheduler cannot touch.
 
 Run:  PYTHONPATH=src python examples/constellation_device_sim.py
-      (add --small for a fast 64-sat × 4-revolution variant)
+      (--small for a fast 64-sat × 4-revolution variant;
+       --planes 2 for the 2-plane fleet — combine with
+       XLA_FLAGS=--xla_force_host_platform_device_count=2 to watch it
+       shard over two CPU host devices)
 """
-import sys
+import argparse
 import time
 
 import numpy as np
 
-from repro.core.energy import PassBudget
-from repro.core.orbits import OrbitalPlane
-from repro.core.sl_step import autoencoder_adapter
-from repro.sim.data import DeviceImageryShards
-from repro.sim.device_sim import (ACTION_SKIPPED, DeviceConstellationSim,
-                                  DeviceSimConfig)
+ap = argparse.ArgumentParser()
+ap.add_argument("--small", action="store_true",
+                help="64 sats x 4 revolutions (fast CPU variant)")
+ap.add_argument("--planes", type=int, default=1,
+                help="orbital planes; >1 runs the sharded fleet engine")
+args = ap.parse_args()
 
-small = "--small" in sys.argv[1:]
-n_sats, n_revolutions = (64, 4) if small else (1000, 8)
+import jax  # noqa: E402
+
+from repro.core.energy import PassBudget  # noqa: E402
+from repro.core.orbits import OrbitalPlane  # noqa: E402
+from repro.core.sl_step import autoencoder_adapter  # noqa: E402
+from repro.sim.data import DeviceImageryShards  # noqa: E402
+from repro.sim.device_sim import (ACTION_SKIPPED,  # noqa: E402
+                                  DeviceConstellationSim, DeviceSimConfig)
+
+n_sats, n_revolutions = (64, 4) if args.small else (1000, 8)
+planes = max(1, args.planes)
 
 shards = DeviceImageryShards(img=32, batch=2)
 adapter = autoencoder_adapter(cut=5, img=32)
 budget = PassBudget(plane=OrbitalPlane(n_sats=n_sats), n_items=4e6)
-cfg = DeviceSimConfig(
-    n_revolutions=n_revolutions,
+energy_knobs = dict(
     battery_j=200.0,          # per-sat battery [J]
     recharge_w=1e-4,          # slow solar recharge: skips emerge
     reserve_j=150.0,          # skip threshold
@@ -43,13 +61,33 @@ cfg = DeviceSimConfig(
 )
 
 t0 = time.time()
-engine = DeviceConstellationSim(adapter, budget, shards, cfg)
-plan = engine.plan.to_host()
-print(f"ring: {n_sats} sats x {n_revolutions} revolutions "
-      f"({n_sats * n_revolutions} passes)")
-print(f"plan (on device, broadcast view): {plan.n_steps[0]} fused "
-      f"steps/pass, drain {plan.drain_j[0]:.1f} J/pass, "
-      f"E_pass {plan.e_total_j[0]:.1f} J, kept {plan.kept_fraction[0]:.3f}")
+if planes > 1:
+    from repro.fleet import FleetConfig, FleetEngine
+
+    engine = FleetEngine(adapter, budget, shards, FleetConfig(
+        n_planes=planes, n_revolutions=n_revolutions, avg_every=1,
+        **energy_knobs))
+    mesh = dict(zip(engine.mesh.axis_names, engine.mesh.devices.shape))
+    layout = (f"fleet layout ({planes}, {n_sats}) sharded over mesh "
+              f"{mesh}; inter-plane checkpoint averaging every "
+              "revolution")
+else:
+    engine = DeviceConstellationSim(adapter, budget, shards,
+                                    DeviceSimConfig(
+                                        n_revolutions=n_revolutions,
+                                        **energy_knobs))
+    layout = f"single ring, (1, {n_sats}) layout on the default device"
+
+devs = jax.devices()
+print(f"devices: {len(devs)} x {devs[0].platform}  ({layout})")
+print(f"ring: {planes} plane(s) x {n_sats} sats x {n_revolutions} "
+      f"revolutions ({planes * n_sats * n_revolutions} passes)")
+plan = engine.plan
+p0 = np.asarray(plan.n_steps).reshape(-1)[0]
+print(f"plan (on device, broadcast view): {p0} fused steps/pass, "
+      f"drain {np.asarray(plan.drain_j).reshape(-1)[0]:.1f} J/pass, "
+      f"E_pass {np.asarray(plan.e_total_j).reshape(-1)[0]:.1f} J, "
+      f"kept {np.asarray(plan.kept_fraction).reshape(-1)[0]:.3f}")
 
 print(f"\n{'rev':>4} {'trained':>8} {'skipped':>8} {'mean loss':>10} "
       f"{'battery J (min/med/max)':>24} {'s/rev':>6}")
@@ -57,7 +95,7 @@ t_rev = time.time()
 last_loss = float("nan")
 for rev in range(n_revolutions):
     res = engine.run(1, stream_telemetry=True)   # ONE host sync per rev
-    bat = res.energy.battery_j
+    bat = np.asarray(res.energy.battery_j)
     trained = res.action != ACTION_SKIPPED
     loss = np.nanmean(res.loss) if trained.any() else float("nan")
     if np.isfinite(loss):
@@ -78,9 +116,9 @@ print(f"  passes served   {int(np.asarray(es.passes_served).sum())}, "
       f"(reserve policy)")
 print(f"  batteries       min {float(np.asarray(es.battery_j).min()):.1f} J"
       f" / max {float(np.asarray(es.battery_j).max()):.1f} J")
-print(f"  train steps     {int(np.asarray(engine.state.step))} fused "
+print(f"  train steps     {int(np.asarray(engine.state.step).sum())} fused "
       f"(last trained-revolution loss {last_loss:.4f})")
 print(f"\nhost contact: {engine.traces} jit trace, "
       f"{engine.device_calls} dispatches, {engine.host_syncs} telemetry "
-      f"syncs for {n_sats * n_revolutions} passes "
+      f"syncs for {planes * n_sats * n_revolutions} passes "
       f"({time.time() - t0:.1f}s total)")

@@ -22,6 +22,11 @@ else
     # test_device_sim suite and the asserted closed_loop_* bench rows)
     echo "== device-sim smoke (host-vs-device closed-loop parity) =="
     python -c "from repro.sim.device_sim import _smoke; _smoke()"
+    # 2-plane x 8-sat fleet smoke on 2 forced CPU devices: join, leave
+    # and seeded-failure events entirely on device, <= 1 host sync per
+    # revolution, host-vs-fleet parity asserted per plane
+    echo "== fleet smoke (2-plane elastic fleet on a 2-device mesh) =="
+    python -m repro.fleet
 fi
 
 echo "== quick benchmark smoke (solver backends + sweep + closed loop) =="

@@ -53,16 +53,20 @@ return equivalently-shaped batches).  A heterogeneous ring (per-sat
 batch shapes) plans in the same single batched solve as a homogeneous
 one.
 
-Host oracle vs device engine
-----------------------------
+Host oracle vs device engines
+-----------------------------
 This Python scheduler is the feature-complete *oracle*: elastic
 membership, random failures, checkpoint handoffs and arbitrary data
-providers, at one Python dispatch per pass.  Steady-state closed loops
-delegate to the device-resident *engine*
-(:mod:`repro.sim.device_sim` — the whole (revolution × ring-slot) loop
-as one jitted scan) via ``run(engine="device")``, which folds the
-engine's telemetry back into :class:`PassRecord` form; small-ring
-parity between the two is pinned by ``tests/test_device_sim.py``.  The
+providers, at one Python dispatch per pass.  ``run(engine="device")``
+delegates to a device-resident engine and folds its telemetry back
+into :class:`PassRecord` form: steady-state closed loops go to
+:mod:`repro.sim.device_sim` (the whole (revolution × ring-slot) loop
+as one jitted scan), while elastic runs — join/leave events, seeded
+``fail_prob`` failures, dead satellites — go to the fleet engine
+(:mod:`repro.fleet`), whose scan carry holds the per-slot aliveness
+mask driven by the precomputed event schedule and the oracle's own
+seeded failure stream.  Small-ring parity is pinned by
+``tests/test_device_sim.py`` and ``tests/test_fleet.py``.  The
 battery policy (clamp to ``[0, battery_j]``) is shared with the engine
 through :func:`repro.core.energy.clamp_battery`, and recharge is
 membership-aware: a satellite collects solar recharge exactly for the
@@ -85,7 +89,7 @@ from repro.core.energy import PassBudget, SplitCosts, clamp_battery
 from repro.core.mission import RevolutionPlanner
 from repro.core.orbits import OrbitalPlane
 from repro.core.sl_step import (SplitAdapter, make_boundary_meter,
-                                make_sl_pass)
+                                make_sl_pass, ring_boundary_bits)
 from repro.core.train_state import SLTrainState
 from repro.train.optimizer import Optimizer, resolve_optimizer
 from repro.utils.treeutil import tree_bytes
@@ -246,11 +250,16 @@ class ConstellationSim:
 
         ``"host"`` is this Python scheduler — the feature-complete
         oracle (elastic membership, random failures, checkpoint
-        handoffs).  ``"device"`` delegates a steady-state run to the
-        device-resident engine (:mod:`repro.sim.device_sim`): the whole
-        closed loop executes as one jitted scan and the telemetry is
-        folded back into :class:`PassRecord` form — see
-        :meth:`run_device` for the preconditions.
+        handoffs).  ``"device"`` delegates the run to a device-resident
+        engine: steady-state rings go to :mod:`repro.sim.device_sim`
+        (the whole closed loop as one jitted scan), while elastic runs
+        (join/leave events, ``fail_prob``, dead satellites) go to the
+        fleet engine (:mod:`repro.fleet`, a 1-plane fleet whose scan
+        carry holds the aliveness mask and seeded failure stream); in
+        both cases the telemetry is folded back into
+        :class:`PassRecord` form — see :meth:`run_device` for the
+        remaining preconditions (traceable provider, no
+        ``handoff_dir``).
         """
         if engine == "device":
             return self.run_device()
@@ -402,13 +411,7 @@ class ConstellationSim:
             raise ValueError(
                 "the device engine runs static steady-state rings only; "
                 "host-oracle features in use: " + ", ".join(blockers))
-        if not getattr(self.data_for_sat, "traceable", False):
-            raise ValueError(
-                "the device engine generates batches inside the jitted "
-                "scan: data_for_sat must be a traceable provider "
-                "(traceable = True, e.g. repro.sim.data."
-                "DeviceImageryShards), got "
-                f"{type(self.data_for_sat).__name__}")
+        self._require_traceable_provider()
         n = len(self.sats)
         if n_revolutions is None:
             if cfg.n_passes % n:
@@ -424,7 +427,8 @@ class ConstellationSim:
             max_steps_per_pass=cfg.max_steps_per_pass, seed=cfg.seed)
         engine = DeviceConstellationSim(self.adapter, self.budget,
                                         self.data_for_sat, dcfg,
-                                        state=self.state)
+                                        state=self.state,
+                                        dtx_bits=self._ring_dtx_bits(n))
         # carry the host fleet's charge AND the data cursor over (a
         # fresh sim starts full at batch 0; a chained delegation resumes
         # from the drained batteries and un-consumed samples)
@@ -434,11 +438,45 @@ class ConstellationSim:
         engine._batch_idx = jnp.asarray(self._batch_idx, jnp.int32)
         return engine
 
+    def _require_traceable_provider(self) -> None:
+        """Both device engines generate batches inside a jitted scan."""
+        if not getattr(self.data_for_sat, "traceable", False):
+            raise ValueError(
+                "the device engine generates batches inside the jitted "
+                "scan: data_for_sat must be a traceable provider "
+                "(traceable = True, e.g. repro.sim.data."
+                "DeviceImageryShards), got "
+                f"{type(self.data_for_sat).__name__}")
+
+    def _ring_dtx_bits(self, n_slots: int) -> np.ndarray:
+        """Per-satellite measured boundary payloads, ``(n_slots,)`` bits.
+
+        The array feed of :func:`~repro.core.sl_step.ring_boundary_bits`
+        threaded into device-resident planning: every ring slot's
+        upcoming batch is peeked *shape-only* (``jax.eval_shape`` over
+        the traceable provider — zero FLOPs, no samples consumed) and
+        metered, so heterogeneous rings plan per-satellite instead of
+        silently broadcasting slot 0's payload ring-wide.
+        """
+        batches = jax.eval_shape(lambda: [self.data_for_sat(
+            m, self._batch_idx) for m in range(n_slots)])
+        bits = ring_boundary_bits(self.adapter, batches,
+                                  self.cfg.quantize_boundary)
+        per_batch = np.asarray([next(iter(b.values())).shape[0]
+                                for b in batches], np.float64)
+        return bits / per_batch
+
     def run_device(self) -> List[PassRecord]:
-        """Delegate the whole run to the device engine, then fold its
+        """Delegate the whole run to a device engine, then fold its
         telemetry back into host form (``records``, ``sats``, ``state``)
         so ``summary()`` and downstream consumers see one consistent
-        view regardless of the engine."""
+        view regardless of the engine.  Steady-state static rings run
+        on the single-ring engine; elastic runs (join/leave events,
+        ``fail_prob``, dead satellites) run on the fleet engine."""
+        cfg = self.cfg
+        if (cfg.join_events or cfg.leave_events or cfg.fail_prob
+                or any(not s.alive for s in self.sats)):
+            return self._run_fleet_device()
         engine = self.as_device_sim()
         self.device_engine = engine          # kept for inspection/tests
         res = engine.run(stream_telemetry=True)
@@ -446,30 +484,130 @@ class ConstellationSim:
         self._batch_idx = int(np.asarray(engine._batch_idx))
 
         plan = res.plan
-        from repro.sim.device_sim import ACTION_NAMES, ACTION_SKIPPED
         k0 = len(self.records)
         R, n = res.action.shape
         for r in range(R):
             for s in range(n):
-                skipped = res.action[r, s] == ACTION_SKIPPED
-                self.records.append(PassRecord(
-                    k0 + r * n + s, s, ACTION_NAMES[int(res.action[r, s])],
-                    loss=None if skipped else float(res.loss[r, s]),
-                    kept_fraction=1.0 if skipped
-                    else float(plan.kept_fraction[s]),
-                    e_total_j=0.0 if skipped else float(plan.e_total_j[s]),
-                    e_proc_j=0.0 if skipped else float(plan.e_proc_j[s]),
-                    e_comm_j=0.0 if skipped else float(plan.e_comm_j[s]),
-                    e_isl_j=0.0 if skipped else float(plan.e_isl_j[s]),
-                    t_total_s=0.0 if skipped else float(plan.t_total_s[s]),
-                    d_isl_bits=float(plan.d_isl_bits[s]),
-                    n_items=0.0 if skipped
-                    else float(plan.n_items_kept[s]),
-                    battery_j=float(res.battery_j[r, s])))
+                self.records.append(self._plan_record(
+                    k0 + r * n + s, s, int(res.action[r, s]),
+                    float(res.loss[r, s]), float(res.battery_j[r, s]),
+                    plan, s))
         for s, host_sat in enumerate(self.sats):
             host_sat.battery_j = float(res.energy.battery_j[s])
             host_sat.passes_served += int(res.energy.passes_served[s])
             host_sat.energy_spent_j += float(res.energy.energy_spent_j[s])
+        return self.records
+
+    @staticmethod
+    def _plan_record(pass_idx: int, sat_id: int, code: int, loss: float,
+                     battery_j: float, plan, sel) -> PassRecord:
+        """One engine telemetry entry as a :class:`PassRecord` — the one
+        plan-row → record mapping shared by the static and fleet
+        delegation folds.  ``sel`` indexes the plan's row for this slot
+        (``s`` for (N,) plans, ``(0, s)`` for fleet (P, M) plans)."""
+        from repro.sim.device_sim import (ACTION_FAILED, ACTION_NAMES,
+                                          ACTION_SKIPPED)
+
+        if code == ACTION_FAILED:
+            return PassRecord(pass_idx, sat_id, "failed",
+                              battery_j=battery_j)
+        if code == ACTION_SKIPPED:
+            return PassRecord(pass_idx, sat_id, "skipped_energy",
+                              d_isl_bits=float(plan.d_isl_bits[sel]),
+                              battery_j=battery_j)
+        return PassRecord(
+            pass_idx, sat_id, ACTION_NAMES[code], loss=loss,
+            kept_fraction=float(plan.kept_fraction[sel]),
+            e_total_j=float(plan.e_total_j[sel]),
+            e_proc_j=float(plan.e_proc_j[sel]),
+            e_comm_j=float(plan.e_comm_j[sel]),
+            e_isl_j=float(plan.e_isl_j[sel]),
+            t_total_s=float(plan.t_total_s[sel]),
+            d_isl_bits=float(plan.d_isl_bits[sel]),
+            n_items=float(plan.n_items_kept[sel]),
+            battery_j=battery_j)
+
+    def _run_fleet_device(self) -> List[PassRecord]:
+        """Elastic delegation: run join/leave/failure scenarios on the
+        fleet engine (:mod:`repro.fleet`) as a 1-plane fleet.
+
+        The event schedule (precomputed joins/leaves + the seeded
+        per-pass failure stream of ``np.random.default_rng(seed)`` —
+        the very stream this host scheduler consumes) drives a per-slot
+        aliveness mask inside the device scan, so the run that used to
+        be forced back to the host executes entirely on device.  The
+        remaining host-only features are checkpoint *persistence*
+        (``handoff_dir``) and non-traceable data providers.
+        """
+        from repro.fleet import FleetConfig, FleetEngine, \
+            build_event_schedule
+
+        cfg = self.cfg
+        if cfg.handoff_dir is not None:
+            raise ValueError(
+                "the device engines run the handoff as the scan carry; "
+                "persisting handoff checkpoints (handoff_dir) is a "
+                "host-oracle feature")
+        self._require_traceable_provider()
+
+        n0, K = len(self.sats), cfg.n_passes
+        rev_len = n0 if K % n0 == 0 else K
+        # membership from the config events; the failure stream is drawn
+        # from THIS sim's live generator instead (one host draw per
+        # pass, exactly what the host loop would consume), so a fresh
+        # sim matches the seeded schedule bit for bit AND chained
+        # host/device segments keep consuming one stream
+        schedule = build_event_schedule(
+            n0, K, join_events=cfg.join_events,
+            leave_events=cfg.leave_events, fail_prob=0.0,
+            n_planes=1, seed=cfg.seed)
+        schedule = dataclasses.replace(schedule, fail_mask=np.array(
+            [[self.rng.random() < cfg.fail_prob for _ in range(K)]]),
+            fail_prob=float(cfg.fail_prob))
+        fcfg = FleetConfig(
+            n_planes=1, n_revolutions=K // rev_len,
+            passes_per_revolution=rev_len, lr=cfg.lr,
+            optimizer=cfg.optimizer,
+            quantize_boundary=cfg.quantize_boundary,
+            battery_j=cfg.battery_j, recharge_w=cfg.recharge_w,
+            reserve_j=cfg.reserve_j,
+            max_steps_per_pass=cfg.max_steps_per_pass, seed=cfg.seed,
+            fail_prob=cfg.fail_prob, join_events=dict(cfg.join_events),
+            leave_events=dict(cfg.leave_events),
+            join_battery_frac=cfg.join_battery_frac, avg_every=0)
+        engine = FleetEngine(
+            self.adapter, self.budget, self.data_for_sat, fcfg,
+            state=self.state, schedule=schedule,
+            dtx_bits=self._ring_dtx_bits(schedule.n_slots),
+            battery0=[s.battery_j for s in self.sats],
+            failed0=[not s.alive for s in self.sats])
+        self.device_engine = engine          # kept for inspection/tests
+        engine._batch_idx = jax.device_put(
+            jnp.full((1,), self._batch_idx, jnp.int32), engine._shard)
+        res = engine.run(stream_telemetry=True)
+        self.state = jax.tree.map(lambda x: x[0], engine.state)
+        self._batch_idx = int(np.asarray(engine._batch_idx)[0])
+
+        plan = res.plan                       # (1, M) host rows
+        k0 = len(self.records)
+        for k in range(K):
+            slot = int(res.sat[0, k])
+            self.records.append(self._plan_record(
+                k0 + k, slot, int(res.action[0, k]),
+                float(res.loss[0, k]), float(res.battery_j[0, k]),
+                plan, (0, slot)))
+
+        # fold the fleet's slot state back onto the host SatelliteStates
+        # (joiners appended with their slot id, exactly like the host run)
+        for m in range(len(self.sats), schedule.n_slots):
+            self.sats.append(SatelliteState(
+                m, 0.0, joined_pass=int(schedule.join_pass[m])))
+        for m, sat in enumerate(self.sats):
+            sat.battery_j = float(res.energy.battery_j[0, m])
+            sat.passes_served += int(res.energy.passes_served[0, m])
+            sat.energy_spent_j += float(res.energy.energy_spent_j[0, m])
+            sat.alive = (not bool(res.failed[0, m])
+                         and int(schedule.leave_pass[m]) > K - 1)
         return self.records
 
     # ------------------------------------------------------------- reporting

@@ -286,6 +286,27 @@ class RevolutionSweep:
                 float(self.d_isl_bits[cut]), batch_size,
                 max_steps_per_pass)
 
+    def fleet_plan(self, batch_size: int, n_planes: int, *, ring: int = 0,
+                   cut: Optional[int] = None, budget: int = 0,
+                   max_steps_per_pass: Optional[int] = None):
+        """One planned grid cell as a P-plane fleet execution plan.
+
+        Broadcasts :meth:`revolution_plan`'s ``(N,)`` cell plan over
+        ``n_planes`` into the ``(P, N)`` layout the fleet engine
+        (:class:`repro.fleet.FleetEngine`) consumes — a swept scenario
+        grid drives a whole sharded constellation with zero re-solves.
+        Heterogeneous per-satellite fleet plans come from
+        :func:`repro.sim.device_sim.plan_ring_passes` with a ``(P, M)``
+        row shape instead.
+        """
+        import jax.numpy as jnp
+
+        plan = self.revolution_plan(batch_size, ring=ring, cut=cut,
+                                    budget=budget,
+                                    max_steps_per_pass=max_steps_per_pass)
+        return type(plan)(*[jnp.broadcast_to(a, (int(n_planes),)
+                                             + a.shape) for a in plan])
+
     def to_host(self) -> Dict[str, np.ndarray]:
         """One explicit device→host sync of every result array."""
         out = {"ring_sizes": self.ring_sizes, "n_items": self.n_items,

@@ -523,27 +523,38 @@ def ring_grid_coeffs(sc: GridScalars, ring_sizes, w1, w2, dtx, disl,
         t_fixed=bcast(t_fixed))
 
 
-def ring_pass_coeffs(sc: GridScalars, n_sats: int, w1, w2, dtx, disl,
-                     n_items) -> CoeffArrays:
+def ring_pass_coeffs(sc: GridScalars, n_sats, w1, w2, dtx, disl,
+                     n_items, *, ring_n: Optional[int] = None
+                     ) -> CoeffArrays:
     """One ring revolution's N problem-(13) instances as ``(N,)`` rows.
 
     The per-*satellite* sibling of :func:`ring_grid_coeffs`: the ring
-    population ``n_sats`` is fixed (it enters through the ISL hop
-    distance, eq. 5) and every coefficient input may be a scalar
-    (broadcast ring-wide) or a ``(N,)`` array (per-satellite measured
-    boundary payloads, heterogeneous item budgets).  Pure array math, so
-    it traces inside the device constellation engine's jitted planning
-    call.  Run under :func:`x64_scope`.
+    population (it enters through the ISL hop distance, eq. 5) is fixed
+    and every coefficient input may be a scalar (broadcast ring-wide)
+    or a ``(N,)`` array (per-satellite measured boundary payloads,
+    heterogeneous item budgets).  Pure array math, so it traces inside
+    the device constellation engine's jitted planning call.  Run under
+    :func:`x64_scope`.
+
+    ``n_sats`` may also be a shape tuple — e.g. ``(P, M)`` for a fleet
+    of P orbital planes whose rings carry M slots each (joiner slots
+    included) — in which case ``ring_n`` gives the orbital population
+    entering the ISL hop distance (default: the last dimension).  The
+    host planner always prices eq. (5) off the configured
+    ``budget.plane.n_sats`` regardless of live membership, so elastic
+    rings pass that as ``ring_n`` to stay oracle-exact.
     """
     from repro.core.orbits import C_LIGHT
 
-    shape = (int(n_sats),)
+    shape = ((int(n_sats),) if isinstance(n_sats, (int, np.integer))
+             else tuple(int(s) for s in n_sats))
+    ring_n = shape[-1] if ring_n is None else int(ring_n)
     f64 = functools.partial(jnp.asarray, dtype=jnp.float64)
     bcast = lambda a: jnp.broadcast_to(f64(a), shape)       # noqa: E731
     w1, w2, dtx, disl = bcast(w1), bcast(w2), bcast(dtx), bcast(disl)
     n = bcast(n_items)
 
-    isl_dist = 2.0 * sc.orbit_radius_m * jnp.sin(jnp.pi / float(n_sats))
+    isl_dist = 2.0 * sc.orbit_radius_m * jnp.sin(jnp.pi / float(ring_n))
     t_fixed = (2.0 * sc.t_prop_s + disl / sc.isl_rate_bps
                + isl_dist / C_LIGHT)
     t_budget = sc.pass_duration_s - t_fixed

@@ -1,0 +1,18 @@
+"""Sharded elastic fleet engine: multi-plane constellations on a mesh.
+
+See :mod:`repro.fleet.engine` for the closed loop and
+:mod:`repro.fleet.events` for the precomputed membership/failure
+schedules that make elastic runs device-resident while keeping the host
+:class:`~repro.core.constellation.ConstellationSim` as the parity
+oracle.
+"""
+from repro.fleet.engine import (FleetConfig, FleetEngine, FleetResult,
+                                FleetTelemetry, average_planes)
+from repro.fleet.events import (EventSchedule, build_event_schedule,
+                                static_schedule)
+
+__all__ = [
+    "FleetConfig", "FleetEngine", "FleetResult", "FleetTelemetry",
+    "average_planes", "EventSchedule", "build_event_schedule",
+    "static_schedule",
+]

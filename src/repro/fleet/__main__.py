@@ -1,0 +1,25 @@
+"""``python -m repro.fleet``: the fleet smoke on a >=2-CPU-device host.
+
+Forces a 2-device CPU topology (when no accelerator/topology is already
+configured) BEFORE jax initializes, so the 2-plane smoke actually
+exercises plane sharding over a real multi-device mesh — the CI proof
+that join/leave/failure events run on device across the mesh with <= 1
+host sync per revolution.
+
+Env knobs (small-machine CI): ``REPRO_FLEET_SMOKE_SATS`` (default 8),
+``REPRO_FLEET_SMOKE_PLANES`` (default 2), ``REPRO_FLEET_SMOKE_REVS``
+(default 2).
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=2").strip()
+
+from repro.fleet.engine import _smoke  # noqa: E402  (after XLA_FLAGS)
+
+_smoke(n_sats=int(os.environ.get("REPRO_FLEET_SMOKE_SATS", "8")),
+       n_planes=int(os.environ.get("REPRO_FLEET_SMOKE_PLANES", "2")),
+       n_revolutions=int(os.environ.get("REPRO_FLEET_SMOKE_REVS", "2")))

@@ -1,0 +1,533 @@
+"""Sharded elastic fleet engine: a constellation on a device mesh.
+
+The PR-4 device engine (:mod:`repro.sim.device_sim`) runs ONE static
+ring on ONE device; elastic membership and random failures stayed
+host-oracle features, and multi-plane constellations meant multiple
+independent runs.  This module is the path from "one ring on one chip"
+to "a constellation on a mesh":
+
+* **Elastic + faults on device** — the scan carry grows a per-slot
+  ``failed`` mask; combined with the precomputed join/leave schedule
+  (:mod:`repro.fleet.events`) it yields each pass's aliveness mask, and
+  the serving slot is computed *inside* the scan as the host's
+  ``ring[k % len(ring)]``.  A seeded failure stream (the host oracle's
+  own ``numpy`` draws, realized per plane) flips slots dead mid-run; a
+  dead or absent slot's pass masks through the shared step kernel
+  (``SLTrainState.apply_updates(where=)``), so the successor trains
+  through unchanged — checkpoint restoration is the carry itself.
+* **Plane-sharded execution** — a :class:`FleetConfig` of P planes × N
+  sats lays the :class:`~repro.sim.energy_state.EnergyState`, the
+  :class:`~repro.sim.device_sim.DevicePassPlan` and the per-plane data
+  cursors out as ``(P, ...)`` arrays sharded over a
+  ``launch/mesh.make_fleet_mesh`` plane axis
+  (``jax.sharding.NamedSharding``); every plane runs its ring's closed
+  loop under one ``vmap``, so the whole fleet advances as ONE jitted
+  (revolution × pass) scan with ≤ 1 telemetry sync per revolution.
+* **Inter-plane ISL exchange** — at revolution boundaries
+  (``avg_every``) the segment checkpoints are averaged across the
+  plane axis (:func:`average_planes`, an all-reduce over the mesh) —
+  the paper's inter-plane ISL checkpoint exchange.
+* **Heterogeneous planning** — all P×M problem-(13) instances are shed
+  and solved in one device call
+  (:func:`~repro.sim.device_sim.plan_ring_passes` with a ``(P, M)``
+  row shape), with per-satellite measured ``dtx_bits`` rows (e.g. from
+  :func:`~repro.core.sl_step.ring_boundary_bits`) planning mixed
+  payloads in the same solve.
+
+The host :class:`~repro.core.constellation.ConstellationSim` stays the
+parity oracle: one host sim per plane (seeded ``seed + p``) must
+reproduce the fleet's action/skip/fail sequences, losses and battery
+trajectories — ``ConstellationSim.run(engine="device")`` now delegates
+elastic runs here (P=1) instead of refusing them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import PassBudget, clamp_battery
+from repro.core.sl_step import (SplitAdapter, dedupe_state_buffers,
+                                make_pass_step)
+from repro.core.train_state import SLTrainState
+from repro.fleet.events import EventSchedule, build_event_schedule
+from repro.launch.mesh import make_fleet_mesh, plane_sharding
+from repro.sim import energy_state as es_mod
+from repro.sim.device_sim import (ACTION_FAILED, ACTION_SHED,
+                                  ACTION_SKIPPED, ACTION_TRAINED,
+                                  DevicePassPlan, measure_and_plan)
+from repro.sim.energy_state import EnergyState
+from repro.train.optimizer import resolve_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Knobs of a P-plane elastic constellation run.
+
+    The steady-state fields mirror
+    :class:`~repro.sim.device_sim.DeviceSimConfig`; the elastic fields
+    mirror the host :class:`~repro.core.constellation
+    .ConstellationConfig` (``join_events`` / ``leave_events`` /
+    ``fail_prob`` / ``join_battery_frac``) — the SAME schedules drive
+    both engines, which is what makes the host the parity oracle.
+    Plane ``p``'s failure stream is seeded ``seed + p``.
+    """
+
+    n_planes: int = 1
+    n_revolutions: int = 1
+    lr: float = 1e-2
+    optimizer: Any = "sgd"
+    quantize_boundary: bool = False
+    battery_j: float = 5_000.0
+    recharge_w: float = 20.0
+    reserve_j: float = 100.0
+    max_steps_per_pass: Optional[int] = 128
+    min_fraction: float = 0.05
+    seed: int = 0
+    # ---- elastic membership / fault injection (host-oracle parity) ----
+    fail_prob: float = 0.0
+    join_events: Dict[int, int] = dataclasses.field(default_factory=dict)
+    leave_events: Dict[int, int] = dataclasses.field(default_factory=dict)
+    join_battery_frac: float = 1.0
+    # ---- fleet structure ----------------------------------------------
+    # passes per revolution (telemetry/streaming/averaging granularity);
+    # None = the initial ring size
+    passes_per_revolution: Optional[int] = None
+    # inter-plane checkpoint averaging period, in revolutions; 0 = off
+    avg_every: int = 1
+
+
+class FleetTelemetry(NamedTuple):
+    """Per-pass scan outputs; stacked to (R, L, P) by the nested scan."""
+
+    action: Any               # int32 ACTION_* code
+    sat: Any                  # int32 serving slot id (-1: ring empty)
+    loss: Any                 # float32 mean loss (NaN unless trained)
+    battery_j: Any            # float32 serving sat battery at pass end
+    n_steps: Any              # int32 fused steps executed
+
+
+def average_planes(tree):
+    """Inter-plane checkpoint averaging over the leading plane axis.
+
+    Float leaves are replaced by their plane-mean (broadcast back, so
+    shapes/shardings are preserved — under the fleet mesh this lowers
+    to an all-reduce over the ``plane`` axis, the inter-plane ISL
+    exchange); integer leaves (step counters, optimizer step schedules)
+    stay per-plane.
+    """
+    def avg(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
+                                    x.shape)
+        return x
+
+    return jax.tree.map(avg, tree)
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Host-side view of one fleet run (synced telemetry).
+
+    Per-pass arrays are ``(P, K)`` — plane-major, pass index within the
+    plane's own K-pass timeline; per-slot arrays are ``(P, M)``.
+    """
+
+    action: np.ndarray        # (P, K) int32 ACTION_* codes
+    sat: np.ndarray           # (P, K) serving slot (-1: ring empty)
+    loss: np.ndarray          # (P, K) NaN unless trained
+    battery_j: np.ndarray     # (P, K) serving sat battery at pass end
+    n_steps: np.ndarray       # (P, K)
+    plan: DevicePassPlan      # (P, M) host copies
+    energy: EnergyState       # (P, M) final fleet state, host copies
+    failed: np.ndarray        # (P, M) final failure mask
+    state: Any                # final SLTrainState, (P, ...) leaves
+
+    def summary(self) -> Dict[str, Any]:
+        """Fleet-wide roll-up, same shape as ``ConstellationSim.summary``
+        (loss_first/loss_last are time-ordered across the fleet)."""
+        trained = (self.action == ACTION_TRAINED) | \
+                  (self.action == ACTION_SHED)
+        # time-major flatten so first/last match the host's pass order
+        t_order = trained.T.reshape(-1)
+        losses = self.loss.T.reshape(-1)[t_order]
+        p_idx, k_idx = np.nonzero(trained)
+        sats = self.sat[p_idx, k_idx]
+        return {
+            "passes": int(self.action.size),
+            "trained": int(trained.sum()),
+            "skipped": int((self.action == ACTION_SKIPPED).sum()),
+            "failed": int((self.action == ACTION_FAILED).sum()),
+            "loss_first": float(losses[0]) if losses.size else None,
+            "loss_last": float(losses[-1]) if losses.size else None,
+            "E_total_J": float(self.plan.e_total_j[p_idx, sats].sum()),
+            "E_comm_J": float(self.plan.e_comm_j[p_idx, sats].sum()),
+            "E_proc_J": float(self.plan.e_proc_j[p_idx, sats].sum()),
+            "E_isl_J": float(self.plan.e_isl_j[p_idx, sats].sum()),
+        }
+
+
+class FleetEngine:
+    """P orbital planes × an elastic M-slot ring each, as ONE program.
+
+    ``batch_fn(sat, idx) -> batch`` must be traceable (the same
+    contract as :class:`~repro.sim.device_sim.DeviceConstellationSim`);
+    plane ``p``'s slot ``m`` reads global satellite id ``p * M + m``,
+    so a per-plane host oracle is simply the same provider with its sat
+    ids offset.  ``state`` is a *single-copy*
+    :class:`~repro.core.train_state.SLTrainState`; the engine
+    replicates it to a ``(P, ...)``-leading fleet state sharded over
+    the plane mesh axis.
+
+    Observability: ``traces`` / ``device_calls`` / ``host_syncs``
+    counters with the same ≤-1-sync-per-revolution contract as the
+    static engine.
+    """
+
+    def __init__(self, adapter: SplitAdapter, budget: PassBudget,
+                 batch_fn: Callable[[Any, Any], Dict],
+                 cfg: Optional[FleetConfig] = None, *,
+                 state: Optional[SLTrainState] = None,
+                 plan: Optional[DevicePassPlan] = None,
+                 dtx_bits=None, schedule: Optional[EventSchedule] = None,
+                 mesh=None, plane_axis: str = "plane",
+                 battery0=None, failed0=None):
+        cfg = FleetConfig() if cfg is None else cfg
+        self.adapter = adapter
+        self.budget = budget
+        self.batch_fn = batch_fn
+        self.cfg = cfg
+        self.n_planes = int(cfg.n_planes)
+        # slot layout follows the schedule (a chained delegation's ring
+        # may already carry joiners beyond the configured plane); the
+        # eq.-(5) ISL physics below stays pinned to budget.plane.n_sats
+        self.n_initial = (budget.plane.n_sats if schedule is None
+                          else schedule.n_initial)
+        self.rev_len = (self.n_initial if cfg.passes_per_revolution is None
+                        else int(cfg.passes_per_revolution))
+        self.n_passes = cfg.n_revolutions * self.rev_len
+
+        if schedule is None:
+            schedule = build_event_schedule(
+                self.n_initial, self.n_passes,
+                join_events=cfg.join_events, leave_events=cfg.leave_events,
+                fail_prob=cfg.fail_prob, n_planes=self.n_planes,
+                seed=cfg.seed)
+        if schedule.n_planes != self.n_planes:
+            raise ValueError(f"schedule covers {schedule.n_planes} planes "
+                             f"but the fleet has {self.n_planes}")
+        self.schedule = schedule
+        self.n_slots = schedule.n_slots
+        P, M = self.n_planes, self.n_slots
+
+        self.optimizer = resolve_optimizer(cfg.optimizer, lr=cfg.lr)
+        if state is None:
+            pa, pb = adapter.init(jax.random.key(cfg.seed))
+            state = SLTrainState.create(pa, pb, self.optimizer)
+
+        # measured costs + plan + scan sizing via the construction block
+        # shared with the single-ring engine; all P*M problem-(13)
+        # instances shed + solve in ONE device call, with eq. (5)
+        # priced off the configured plane (host parity)
+        self.dtx_bits = dtx_bits
+        self.batch_size, self.costs, self.plan, self._scan_steps = \
+            measure_and_plan(adapter, budget, batch_fn,
+                             quantize_boundary=cfg.quantize_boundary,
+                             params_a=state.params_a, n_sats=(P, M),
+                             ring_n=budget.plane.n_sats, dtx_bits=dtx_bits,
+                             max_steps_per_pass=cfg.max_steps_per_pass,
+                             min_fraction=cfg.min_fraction, plan=plan)
+        if tuple(self.plan.n_steps.shape) != (P, M):
+            raise ValueError(f"plan shape {self.plan.n_steps.shape} != "
+                             f"fleet layout ({P}, {M})")
+
+        # ---- mesh + (P, ...) layout ------------------------------------
+        self.mesh = make_fleet_mesh(P) if mesh is None else mesh
+        axis_size = dict(zip(self.mesh.axis_names,
+                             self.mesh.devices.shape))[plane_axis]
+        if P % axis_size:
+            raise ValueError(
+                f"{P} planes cannot shard evenly over the {axis_size}-way "
+                f"'{plane_axis}' mesh axis; use make_fleet_mesh({P})")
+        self._shard = plane_sharding(self.mesh, plane_axis)
+        put = lambda t: jax.device_put(t, self._shard)    # noqa: E731
+
+        self.state = put(jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.asarray(x)[None],
+                                       (P,) + jnp.shape(x)), state))
+        battery = np.full((P, M), cfg.battery_j, np.float32)
+        battery[:, self.n_initial:] = clamp_battery(
+            cfg.battery_j * cfg.join_battery_frac, cfg.battery_j)
+        if battery0 is not None:
+            battery[:, :self.n_initial] = np.broadcast_to(
+                np.asarray(battery0, np.float32), (P, self.n_initial))
+        self.energy = put(EnergyState(
+            battery_j=jnp.asarray(battery),
+            energy_spent_j=jnp.zeros((P, M), jnp.float32),
+            passes_served=jnp.zeros((P, M), jnp.int32),
+            passes_skipped=jnp.zeros((P, M), jnp.int32)))
+        failed = np.zeros((P, M), bool)
+        if failed0 is not None:
+            failed[:, :self.n_initial] = np.broadcast_to(
+                np.asarray(failed0, bool), (P, self.n_initial))
+        self._failed = put(jnp.asarray(failed))
+        self._fail_mask = put(jnp.asarray(schedule.fail_mask))
+        self._batch_idx = put(jnp.zeros((P,), jnp.int32))
+        self._pass_idx = jnp.zeros((), jnp.int32)
+        self.plan = put(self.plan)
+
+        self._pass_step = make_pass_step(
+            adapter, self.optimizer,
+            quantize_boundary=cfg.quantize_boundary)
+        self._fns: Dict[int, Any] = {}
+        self.traces = 0
+        self.device_calls = 0
+        self.host_syncs = 0
+
+    # ------------------------------------------------------- the program
+    def _compiled(self, n_revolutions: int):
+        """The jitted (revolution × pass) fleet loop for R revolutions,
+        vmapped over planes; cached per R."""
+        fn = self._fns.get(n_revolutions)
+        if fn is not None:
+            return fn
+
+        cfg = self.cfg
+        P, M, L = self.n_planes, self.n_slots, self.rev_len
+        K = self._scan_steps
+        pass_step = self._pass_step
+        batch_fn = self.batch_fn
+        avg_every = int(cfg.avg_every)
+        horizon = self.schedule.n_passes
+        recharge_j = jnp.float32(cfg.recharge_w
+                                 * self.budget.plane.pass_duration_s)
+        reserve = jnp.float32(cfg.reserve_j)
+        cap = jnp.float32(cfg.battery_j)
+        step_ids = jnp.arange(K, dtype=jnp.int32)
+        plane_ids = jnp.arange(P, dtype=jnp.int32)
+        join_pass = jnp.asarray(self.schedule.join_pass, jnp.int32)
+        leave_pass = jnp.asarray(self.schedule.leave_pass, jnp.int32)
+
+        def closed_loop(state, energy, failed, bidx, k, plan, fail_mask):
+            self.traces += 1        # side effect fires at trace time
+
+            def plane_pass(plane, fail_k, state, energy, failed, bidx,
+                           plan, k):
+                # membership first, exactly like the host scheduler:
+                # joins and leaves apply at pass start, then the serving
+                # slot is ring[k % len(ring)] over the alive slots in
+                # slot order
+                member = (join_pass <= k) & (k < leave_pass) & ~failed
+                n_alive = member.sum()
+                served = n_alive > 0
+                rank = jnp.where(served, k % jnp.maximum(n_alive, 1), 0)
+                cums = jnp.cumsum(member.astype(jnp.int32))
+                slot = jnp.argmax((cums == rank + 1)
+                                  & member).astype(jnp.int32)
+
+                # the host's decision order: seeded failure draw, then
+                # the reserve-skip policy, then the planned masked pass
+                fail = served & fail_k
+                skip = energy.battery_j[slot] < reserve
+                trains = served & ~fail & ~skip
+                n_valid = jnp.where(trains,
+                                    jnp.minimum(plan.n_steps[slot], K), 0)
+
+                def step_body(st, j):
+                    return pass_step(st,
+                                     batch_fn(plane * M + slot, bidx + j),
+                                     j < n_valid)
+
+                state, losses = jax.lax.scan(step_body, state, step_ids)
+                valid = step_ids < n_valid
+                loss = jnp.where(
+                    trains,
+                    jnp.where(valid, losses, 0.0).sum()
+                    / jnp.maximum(n_valid, 1).astype(jnp.float32),
+                    jnp.nan)
+
+                failed = failed.at[slot].set(failed[slot] | fail)
+                energy = es_mod.apply_pass(
+                    energy, slot, plan.drain_j[slot],
+                    plan.e_total_j[slot], cap, trains,
+                    skipped=served & ~fail & skip)
+                # recharge this pass's members that are still alive (a
+                # slot that just failed collects nothing — it is dead)
+                energy = es_mod.recharge(energy, recharge_j, cap,
+                                         member_mask=member & ~failed)
+                bidx = bidx + n_valid
+                action = jnp.where(
+                    ~served | fail, ACTION_FAILED,
+                    jnp.where(skip, ACTION_SKIPPED,
+                              jnp.where(plan.kept_fraction[slot] < 1.0,
+                                        ACTION_SHED, ACTION_TRAINED))
+                ).astype(jnp.int32)
+                telem = FleetTelemetry(
+                    action=action,
+                    sat=jnp.where(served, slot, -1).astype(jnp.int32),
+                    loss=loss,
+                    battery_j=jnp.where(served, energy.battery_j[slot],
+                                        jnp.nan),
+                    n_steps=n_valid)
+                return (state, energy, failed, bidx), telem
+
+            vpass = jax.vmap(plane_pass,
+                             in_axes=(0, 0, 0, 0, 0, 0, 0, None))
+
+            def pass_body(carry, _):
+                state, energy, failed, bidx, k = carry
+                # beyond the precomputed horizon no scheduled failure
+                # fires (the clip would otherwise replay the last draw)
+                fail_k = (jnp.take(fail_mask,
+                                   jnp.minimum(k, horizon - 1), axis=1)
+                          & (k < horizon))
+                (state, energy, failed, bidx), telem = vpass(
+                    plane_ids, fail_k, state, energy, failed, bidx,
+                    plan, k)
+                return (state, energy, failed, bidx, k + 1), telem
+
+            def rev_body(carry, _):
+                carry, telem = jax.lax.scan(pass_body, carry, None,
+                                            length=L)
+                state, energy, failed, bidx, k = carry
+                if avg_every > 0 and P > 1:
+                    # inter-plane ISL exchange at the revolution boundary
+                    do = (k // L) % avg_every == 0
+                    state = jax.tree.map(
+                        lambda a, o: jnp.where(do, a, o),
+                        average_planes(state), state)
+                return (state, energy, failed, bidx, k), telem
+
+            carry, telem = jax.lax.scan(
+                rev_body, (state, energy, failed, bidx, k), None,
+                length=n_revolutions)
+            return carry + (telem,)
+
+        fn = jax.jit(closed_loop, donate_argnums=(0, 1, 2, 3))
+        self._fns[n_revolutions] = fn
+        return fn
+
+    # --------------------------------------------------------------- run
+    def run(self, n_revolutions: Optional[int] = None, *,
+            stream_telemetry: bool = False) -> FleetResult:
+        """Run R fleet revolutions; chainable (state/aliveness persist).
+
+        ``stream_telemetry=True`` dispatches one revolution at a time
+        and syncs its telemetry (exactly one host sync per revolution);
+        the default runs all R revolutions in one dispatch with a
+        single sync at the end.
+        """
+        cfg = self.cfg
+        R = cfg.n_revolutions if n_revolutions is None else n_revolutions
+        if R < 1:
+            raise ValueError("need at least one revolution")
+        self.state._require_live("fleet closed loop")
+        state = dedupe_state_buffers(self.state)
+        self.state.mark_consumed()
+        energy, failed = self.energy, self._failed
+        bidx, k = self._batch_idx, self._pass_idx
+
+        chunks = []
+        fn = self._compiled(1 if stream_telemetry else R)
+        for _ in range(R if stream_telemetry else 1):
+            state, energy, failed, bidx, k, telem = fn(
+                state, energy, failed, bidx, k, self.plan, self._fail_mask)
+            # commit the carry per dispatch: an interrupted streaming
+            # study keeps every completed revolution and stays chainable
+            self.state, self.energy, self._failed = state, energy, failed
+            self._batch_idx, self._pass_idx = bidx, k
+            self.device_calls += 1
+            chunks.append(jax.tree.map(np.asarray, telem))  # the ONE sync
+            self.host_syncs += 1
+
+        telem = jax.tree.map(lambda *xs: np.concatenate(xs), *chunks)
+        # (R, L, P) -> (P, R*L): plane-major per-pass timelines
+        flat = lambda x: np.transpose(x, (2, 0, 1)).reshape(   # noqa: E731
+            self.n_planes, -1)
+        return FleetResult(
+            action=flat(telem.action), sat=flat(telem.sat),
+            loss=flat(telem.loss), battery_j=flat(telem.battery_j),
+            n_steps=flat(telem.n_steps),
+            plan=DevicePassPlan(*[np.asarray(a) for a in self.plan]),
+            energy=EnergyState(*[np.asarray(a) for a in energy]),
+            failed=np.asarray(failed), state=state)
+
+
+def _smoke(n_sats: int = 8, n_planes: int = 2,
+           n_revolutions: int = 2) -> None:       # pragma: no cover
+    """``python -m repro.fleet``: host-vs-fleet closed-loop parity with
+    join, leave and seeded-failure events, for CI.
+
+    Each plane's host oracle is a :class:`ConstellationSim` with the
+    same event schedule and failure seed (``seed + p``), same model
+    init and its data ids offset to the plane's global range; the fleet
+    must reproduce every action (trained/shed/skip/**failed**), serving
+    sat id, loss and battery reading, with ≤ 1 host sync per
+    revolution.
+    """
+    import time
+
+    from repro.core.constellation import (ConstellationConfig,
+                                          ConstellationSim)
+    from repro.core.orbits import OrbitalPlane
+    from repro.core.sl_step import autoencoder_adapter
+    from repro.sim.data import DeviceImageryShards
+    from repro.sim.device_sim import ACTION_NAMES
+
+    shards = DeviceImageryShards(img=32, batch=4)
+    adapter = autoencoder_adapter(cut=5, img=32)
+    budget = PassBudget(plane=OrbitalPlane(n_sats=n_sats), n_items=4e6)
+    events = dict(join_events={3: 1}, leave_events={5: 1})
+    cfg = FleetConfig(
+        n_planes=n_planes, n_revolutions=n_revolutions,
+        battery_j=200.0, recharge_w=0.01, reserve_j=150.0,
+        max_steps_per_pass=2, fail_prob=0.2, seed=0, avg_every=0,
+        **events)
+
+    t0 = time.time()
+    fleet = FleetEngine(adapter, budget, shards, cfg)
+    M, K = fleet.n_slots, fleet.n_passes
+    res = fleet.run(stream_telemetry=True)
+    t1 = time.time()
+    devs = len(jax.devices())
+    print(f"fleet: {n_planes} planes x {n_sats}(+{M - n_sats} join) sats "
+          f"x {n_revolutions} revolutions on {devs} device(s), mesh "
+          f"{dict(zip(fleet.mesh.axis_names, fleet.mesh.devices.shape))} "
+          f"({t1 - t0:.1f}s)")
+    print(f"  {res.summary()}")
+    print(f"  traces={fleet.traces} device_calls={fleet.device_calls} "
+          f"host_syncs={fleet.host_syncs} (<=1/revolution)")
+    assert fleet.traces == 1 and fleet.host_syncs <= n_revolutions
+
+    mism = 0
+    for p in range(n_planes):
+        hcfg = ConstellationConfig(
+            n_passes=K, batch_size=4, battery_j=200.0, recharge_w=0.01,
+            reserve_j=150.0, max_steps_per_pass=2, fail_prob=0.2,
+            seed=cfg.seed + p, **events)
+        host = ConstellationSim(
+            adapter, budget, lambda s, i, p=p: shards(p * M + s, i), hcfg)
+        host.state = SLTrainState.create(
+            *adapter.init(jax.random.key(cfg.seed)), host.optimizer)
+        host.run()
+        h_act = [r.action for r in host.records]
+        d_act = [ACTION_NAMES[int(a)] for a in res.action[p]]
+        assert h_act == d_act, (p, h_act, d_act)
+        assert [r.sat_id for r in host.records] == list(res.sat[p])
+        for hr, dl, db in zip(host.records, res.loss[p], res.battery_j[p]):
+            if hr.loss is not None:
+                mism += abs(dl - hr.loss) > 2e-4 * abs(hr.loss) + 2e-5
+            np.testing.assert_allclose(db, hr.battery_j, rtol=1e-5,
+                                       atol=0.05)
+    assert mism == 0
+    s = res.summary()
+    assert s["failed"] > 0 and s["skipped"] > 0 and s["trained"] > 0, s
+    print(f"  host-vs-fleet parity OK for all {n_planes} planes "
+          f"({time.time() - t1:.1f}s host oracle)")
+
+
+if __name__ == "__main__":                          # pragma: no cover
+    _smoke()

@@ -1,0 +1,115 @@
+"""Precomputed membership / failure schedules for the fleet engine.
+
+The host :class:`~repro.core.constellation.ConstellationSim` mutates its
+ring from Python — ``join_events`` append ``SatelliteState``s,
+``leave_events`` and seeded ``fail_prob`` draws flip ``alive`` flags —
+which is exactly why elastic runs used to be forced back to the host
+oracle.  A device program cannot reshape arrays mid-scan, but it does
+not have to: every membership event is either *statically known*
+(join/leave schedules are plain config dicts) or *seeded* (the failure
+draw consumes one ``numpy`` ``Generator.random()`` per pass, a stream
+that is precomputable to the last bit).  This module folds all of it
+into an :class:`EventSchedule` of fixed-shape arrays:
+
+* ``join_pass[m]``  — the pass at which slot ``m`` becomes a ring
+  member (0 for the initial ring; joiner slots are appended in event
+  order, mirroring the host's ``len(self.sats)`` id assignment);
+* ``leave_pass[m]`` — the pass at which slot ``m`` is removed
+  (``NEVER`` = int32 max, so membership persists for chained runs
+  beyond the horizon; the host's ``sid % len(sats)`` resolution is
+  replayed against the join schedule, so ids match exactly);
+* ``fail_mask[p, k]`` — plane ``p``'s seeded Bernoulli failure stream:
+  ``default_rng(seed + p).random(K) < fail_prob``, the *same* stream
+  the host oracle consumes one draw at a time (``Generator.random()``
+  sequential draws equal one array draw), realized as booleans on the
+  host so f32/f64 threshold rounding can never flip a decision.
+
+Inside the scan, slot ``m`` is alive at pass ``k`` iff
+``join_pass[m] <= k < leave_pass[m]`` and it has not failed (the
+``failed`` mask rides the scan carry); the serving slot is the
+``k mod n_alive``-th member in slot order — precisely the host's
+``ring[k % len(ring)]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+#: ``leave_pass`` sentinel for "never leaves" — far beyond any horizon,
+#: so chained runs past the precomputed schedule keep their membership
+#: (only *failures* stop firing there: the seeded stream is finite).
+NEVER = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class EventSchedule:
+    """Membership + failure events for ``n_passes`` passes over
+    ``n_slots`` slots (initial ring + every joiner), per plane."""
+
+    n_initial: int                  # slots alive at pass 0
+    n_slots: int                    # M = n_initial + total joins
+    n_passes: int                   # K, the precomputed horizon
+    join_pass: np.ndarray           # (M,) int32
+    leave_pass: np.ndarray          # (M,) int32; NEVER = never leaves
+    fail_mask: np.ndarray           # (P, K) bool, seeded per plane
+    fail_prob: float
+    seed: int
+
+    @property
+    def n_planes(self) -> int:
+        return self.fail_mask.shape[0]
+
+    def member_at(self, k: int, failed: Optional[np.ndarray] = None
+                  ) -> np.ndarray:
+        """Host-side membership oracle (tests): alive slots at pass ``k``."""
+        member = (self.join_pass <= k) & (k < self.leave_pass)
+        if failed is not None:
+            member = member & ~np.asarray(failed)
+        return member
+
+
+def build_event_schedule(n_initial: int, n_passes: int, *,
+                         join_events: Optional[Mapping[int, int]] = None,
+                         leave_events: Optional[Mapping[int, int]] = None,
+                         fail_prob: float = 0.0, n_planes: int = 1,
+                         seed: int = 0) -> EventSchedule:
+    """Replay the host scheduler's event semantics into fixed arrays.
+
+    Mirrors ``ConstellationSim.run`` pass for pass: at pass ``k`` joins
+    are appended first (slot id = current total count), then a leave
+    event resolves ``sid % <total count>`` — so a leave targeting a
+    yet-to-join slot id behaves identically in both engines.  Plane
+    ``p``'s failure stream is drawn from ``default_rng(seed + p)``, one
+    draw per pass whether or not it fires — matching the host oracle's
+    per-pass ``rng.random()`` consumption exactly (the host sim for
+    plane ``p`` must therefore run with ``seed + p``).
+    """
+    join_events = dict(join_events or {})
+    leave_events = dict(leave_events or {})
+    join_pass = [0] * int(n_initial)
+    leaves = []
+    for k in range(int(n_passes)):
+        for _ in range(int(join_events.get(k, 0))):
+            join_pass.append(k)
+        if k in leave_events:
+            leaves.append((k, int(leave_events[k]) % len(join_pass)))
+    n_slots = len(join_pass)
+    leave_pass = np.full((n_slots,), NEVER, np.int32)
+    for k, sid in leaves:
+        leave_pass[sid] = min(int(leave_pass[sid]), k)
+    fail_mask = np.stack([
+        np.random.default_rng(seed + p).random(int(n_passes)) < fail_prob
+        for p in range(int(n_planes))])
+    return EventSchedule(
+        n_initial=int(n_initial), n_slots=n_slots, n_passes=int(n_passes),
+        join_pass=np.asarray(join_pass, np.int32), leave_pass=leave_pass,
+        fail_mask=fail_mask, fail_prob=float(fail_prob), seed=int(seed))
+
+
+def static_schedule(n_sats: int, n_passes: int,
+                    n_planes: int = 1, seed: int = 0) -> EventSchedule:
+    """A steady-state schedule: no events, no failures."""
+    return build_event_schedule(n_sats, n_passes, n_planes=n_planes,
+                                seed=seed)

@@ -27,6 +27,33 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_fleet_mesh(planes: int):
+    """A 1-D ``("plane",)`` mesh for the fleet engine's plane axis.
+
+    The axis size is the largest divisor of ``planes`` this host's
+    device count supports, so a ``(P, N)``-laid-out fleet always shards
+    evenly: 4 planes on 2 CPU host devices -> 2-way plane sharding, any
+    plane count on 1 device -> a trivial (replicated) mesh.  In the
+    paper's terms each mesh slot carries one or more orbital planes;
+    inter-plane checkpoint averaging all-reduces over this axis (the
+    inter-plane ISL exchange).
+    """
+    n = len(jax.devices())
+    planes = max(1, int(planes))
+    size = max(d for d in range(1, min(planes, n) + 1) if planes % d == 0)
+    return jax.make_mesh((size,), ("plane",))
+
+
+def plane_sharding(mesh, axis: str = "plane"):
+    """``NamedSharding`` splitting leading-axis-(P,) arrays over ``axis``.
+
+    Works with :func:`make_fleet_mesh` (axis ``"plane"``) or any other
+    mesh that carries a suitable axis (e.g. :func:`make_host_mesh`'s
+    ``"data"`` axis for CPU-device tests); trailing dims replicate.
+    """
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(axis))
+
+
 # TPU v5e roofline constants (per chip) — §Roofline hardware targets.
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s

@@ -68,8 +68,9 @@ from repro.utils.treeutil import tree_bytes
 ACTION_TRAINED = 0
 ACTION_SHED = 1
 ACTION_SKIPPED = 2
+ACTION_FAILED = 3          # fleet engine only: a static ring cannot fail
 ACTION_NAMES = {ACTION_TRAINED: "trained", ACTION_SHED: "shed",
-                ACTION_SKIPPED: "skipped_energy"}
+                ACTION_SKIPPED: "skipped_energy", ACTION_FAILED: "failed"}
 
 
 class DevicePassPlan(NamedTuple):
@@ -138,11 +139,12 @@ def plan_from_report(rep, frac, n_items, d_isl_bits, batch_size,
 
 
 def plan_ring_passes(budget: PassBudget, costs: SplitCosts, *,
-                     batch_size: int, n_sats: Optional[int] = None,
+                     batch_size: int, n_sats=None,
                      dtx_bits=None, n_items=None,
                      max_steps_per_pass: Optional[int] = None,
                      min_fraction: float = 0.05, tol: float = 1e-10,
-                     max_iters: int = 80) -> DevicePassPlan:
+                     max_iters: int = 80,
+                     ring_n: Optional[int] = None) -> DevicePassPlan:
     """Shed + solve one ring revolution's N passes, entirely on device.
 
     The device twin of ``RevolutionPlanner.plan_revolution``: N
@@ -150,13 +152,18 @@ def plan_ring_passes(budget: PassBudget, costs: SplitCosts, *,
     :func:`~repro.core.resource_opt_jax.ring_pass_coeffs` — scalars
     broadcast ring-wide, or per-satellite ``(N,)`` arrays for measured
     heterogeneous payloads (``dtx_bits``) / item budgets (``n_items``).
+
+    ``n_sats`` may be a shape tuple (the fleet engine plans ``(P, M)``
+    rows in one solve); ``ring_n`` then pins the orbital population of
+    the eq.-(5) ISL hop distance (the host oracle always prices it off
+    the configured plane, not live membership).
     """
     from repro.core import resource_opt_jax as roj
 
     if not roj.available():                        # pragma: no cover
         raise RuntimeError("the device constellation engine needs the JAX "
                            "solver backend (repro.core.resource_opt_jax)")
-    n_sats = budget.plane.n_sats if n_sats is None else int(n_sats)
+    n_sats = budget.plane.n_sats if n_sats is None else n_sats
     dtx = costs.dtx_bits if dtx_bits is None else dtx_bits
     items = budget.n_items if n_items is None else n_items
     sc = roj.grid_scalars(budget.plane, budget.link, budget.isl,
@@ -164,11 +171,46 @@ def plan_ring_passes(budget: PassBudget, costs: SplitCosts, *,
     with roj.x64_scope():
         coeffs = roj.ring_pass_coeffs(sc, n_sats, costs.w1_flops,
                                       costs.w2_flops, dtx,
-                                      costs.d_isl_bits, items)
+                                      costs.d_isl_bits, items,
+                                      ring_n=ring_n)
         rep, frac = roj.shed_and_solve_coeffs(coeffs, min_fraction, tol,
                                               max_iters)
         return plan_from_report(rep, frac, items, costs.d_isl_bits,
                                 batch_size, max_steps_per_pass)
+
+
+def measure_and_plan(adapter: SplitAdapter, budget: PassBudget, batch_fn,
+                     *, quantize_boundary: bool, params_a, n_sats,
+                     ring_n: Optional[int] = None, dtx_bits=None,
+                     max_steps_per_pass: Optional[int] = None,
+                     min_fraction: float = 0.05, plan=None):
+    """The shared construction block of every device engine.
+
+    Measures the boundary payload shape-only (one ``eval_shape`` probe
+    batch), folds the measured costs (``dtx_bits`` per item, segment-A
+    handoff bytes from the live ``params_a``), plans the pass rows on
+    device (or accepts an external ``plan``), and sizes the static
+    per-pass scan from the plan's actual largest step count (ONE host
+    read, construction only), bucketed on the repo-wide schedule so
+    replans recompile O(log k) at most.  Returns
+    ``(batch_size, costs, plan, scan_steps)``.  Keeping this in one
+    place is what keeps the single-ring engine and the fleet engine
+    measuring and planning identically — the host-oracle parity
+    invariant.
+    """
+    abstract = jax.eval_shape(lambda: batch_fn(0, 0))
+    batch_size = int(jax.tree.leaves(abstract)[0].shape[0])
+    dtx = boundary_bits(adapter, abstract, quantize_boundary) / batch_size
+    costs = dataclasses.replace(adapter.costs(), dtx_bits=dtx,
+                                d_isl_bits=8.0 * tree_bytes(params_a))
+    if plan is None:
+        plan = plan_ring_passes(budget, costs, batch_size=batch_size,
+                                n_sats=n_sats, ring_n=ring_n,
+                                dtx_bits=dtx_bits,
+                                max_steps_per_pass=max_steps_per_pass,
+                                min_fraction=min_fraction)
+    k_max = int(np.asarray(jnp.max(plan.n_steps)))
+    return batch_size, costs, plan, _bucket_size(max(k_max, 1))
 
 
 class PassTelemetry(NamedTuple):
@@ -185,10 +227,11 @@ class PassTelemetry(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class DeviceSimConfig:
     """Closed-loop knobs, mirroring the steady-state subset of
-    :class:`~repro.core.constellation.ConstellationConfig` (elastic
-    membership, random failures and checkpoint handoffs are host-oracle
-    features: they reshape the ring or touch the filesystem, which a
-    static device program cannot)."""
+    :class:`~repro.core.constellation.ConstellationConfig`.  Elastic
+    membership and random failures belong to the fleet engine
+    (:mod:`repro.fleet`, whose scan carry holds the aliveness mask);
+    checkpoint *persistence* (``handoff_dir``) remains host-oracle —
+    it touches the filesystem, which no device program can."""
 
     n_revolutions: int = 1
     lr: float = 1e-2
@@ -257,7 +300,8 @@ class DeviceConstellationSim:
                  batch_fn: Callable[[Any, Any], Dict],
                  cfg: Optional[DeviceSimConfig] = None, *,
                  state: Optional[SLTrainState] = None,
-                 plan: Optional[DevicePassPlan] = None):
+                 plan: Optional[DevicePassPlan] = None,
+                 dtx_bits=None):
         cfg = DeviceSimConfig() if cfg is None else cfg
         self.adapter = adapter
         self.budget = budget
@@ -271,31 +315,23 @@ class DeviceConstellationSim:
         self.state = state
         self.energy = init_energy_state(self.n_sats, cfg.battery_j)
 
-        # measured costs, shape-only (the host sim's _measured_costs twin):
-        # the boundary payload from an abstract batch, the ISL payload from
-        # the live segment-A buffers
-        abstract = jax.eval_shape(lambda: batch_fn(0, 0))
-        self.batch_size = int(jax.tree.leaves(abstract)[0].shape[0])
-        dtx = boundary_bits(adapter, abstract,
-                            cfg.quantize_boundary) / self.batch_size
-        self.costs = dataclasses.replace(
-            adapter.costs(), dtx_bits=dtx,
-            d_isl_bits=8.0 * tree_bytes(state.params_a))
-        self.plan = plan if plan is not None else plan_ring_passes(
-            budget, self.costs, batch_size=self.batch_size,
-            n_sats=self.n_sats, max_steps_per_pass=cfg.max_steps_per_pass,
-            min_fraction=cfg.min_fraction)
+        # measured costs + on-device plan + static scan sizing, via the
+        # construction block shared with the fleet engine.  dtx_bits:
+        # per-satellite measured boundary payloads ((N,) rows, e.g.
+        # from sl_step.ring_boundary_bits) plan a heterogeneous ring in
+        # the same single device solve; None broadcasts the measured
+        # scalar.
+        self.dtx_bits = dtx_bits
+        self.batch_size, self.costs, self.plan, self._scan_steps = \
+            measure_and_plan(adapter, budget, batch_fn,
+                             quantize_boundary=cfg.quantize_boundary,
+                             params_a=state.params_a, n_sats=self.n_sats,
+                             dtx_bits=dtx_bits,
+                             max_steps_per_pass=cfg.max_steps_per_pass,
+                             min_fraction=cfg.min_fraction, plan=plan)
         if self.plan.n_sats != self.n_sats:
             raise ValueError(f"plan covers {self.plan.n_sats} slots but the "
                              f"ring has {self.n_sats} satellites")
-        # static scan length = the plan's actual largest step count (one
-        # host read, construction only) — cfg.max_steps_per_pass already
-        # capped the plan, and sizing from the cap alone would run (and
-        # mask away) up to cap-minus-allocated full gradient steps per
-        # pass.  Bucketed on the shared schedule with the fused pass
-        # engine so replans recompile O(log k) at most.
-        k_max = int(np.asarray(jnp.max(self.plan.n_steps)))
-        self._scan_steps = _bucket_size(max(k_max, 1))
 
         self._pass_step = make_pass_step(
             adapter, self.optimizer,

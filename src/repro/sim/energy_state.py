@@ -70,7 +70,7 @@ def recharge(state: EnergyState, energy_j, capacity_j,
 
 
 def apply_pass(state: EnergyState, sat, drain_j, e_total_j, capacity_j,
-               trained) -> EnergyState:
+               trained, skipped: Optional[Any] = None) -> EnergyState:
     """Account one pass for satellite ``sat`` (all args traceable).
 
     ``trained`` (bool scalar) gates everything: a reserve-policy skip
@@ -78,8 +78,14 @@ def apply_pass(state: EnergyState, sat, drain_j, e_total_j, capacity_j,
     the satellite-side battery draw (E_proc^sat + E_comm^down + E_ISL —
     what the host sim subtracts), ``e_total_j`` the full eq.-(11) cost
     recorded in ``energy_spent_j``.
+
+    ``skipped`` (bool scalar) defaults to ``~trained`` — the static
+    ring's dichotomy.  The fleet engine passes it explicitly so a
+    failure (or an empty-ring pass) bumps *neither* counter, matching
+    the host oracle's "failed" records.
     """
     t = jnp.asarray(trained)
+    s = ~t if skipped is None else jnp.asarray(skipped)
     f = t.astype(jnp.float32)
     battery = state.battery_j.at[sat].add(-drain_j * f)
     return EnergyState(
@@ -87,4 +93,4 @@ def apply_pass(state: EnergyState, sat, drain_j, e_total_j, capacity_j,
         energy_spent_j=state.energy_spent_j.at[sat].add(e_total_j * f),
         passes_served=state.passes_served.at[sat].add(t.astype(jnp.int32)),
         passes_skipped=state.passes_skipped.at[sat].add(
-            (~t).astype(jnp.int32)))
+            s.astype(jnp.int32)))

@@ -176,19 +176,23 @@ def test_sweep_cell_feeds_whole_revolution():
 
 
 def test_delegation_guards():
+    """Elastic membership and random failures are no longer blockers
+    (they delegate to the fleet engine, tests/test_fleet.py); the
+    remaining host-only features are non-traceable providers, handoff
+    persistence, and ragged static revolutions."""
     budget = _budget()
-    sim = ConstellationSim(ADAPTER, budget, SHARDS,
-                           ConstellationConfig(n_passes=8, fail_prob=0.5))
-    with pytest.raises(ValueError, match="random failures"):
-        sim.run(engine="device")
-    sim = ConstellationSim(ADAPTER, budget, SHARDS,
-                           ConstellationConfig(n_passes=8,
-                                               join_events={2: 1}))
-    with pytest.raises(ValueError, match="elastic membership"):
-        sim.run(engine="device")
     sim = ConstellationSim(ADAPTER, budget, lambda s, i: SHARDS(s, i),
                            ConstellationConfig(n_passes=8))
     with pytest.raises(ValueError, match="traceable"):
+        sim.run(engine="device")
+    sim = ConstellationSim(ADAPTER, budget, lambda s, i: SHARDS(s, i),
+                           ConstellationConfig(n_passes=8, fail_prob=0.5))
+    with pytest.raises(ValueError, match="traceable"):
+        sim.run(engine="device")
+    sim = ConstellationSim(ADAPTER, budget, SHARDS,
+                           ConstellationConfig(n_passes=8, fail_prob=0.5,
+                                               handoff_dir="/tmp/x"))
+    with pytest.raises(ValueError, match="handoff"):
         sim.run(engine="device")
     sim = ConstellationSim(ADAPTER, budget, SHARDS,
                            ConstellationConfig(n_passes=7))
