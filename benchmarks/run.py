@@ -26,6 +26,7 @@ import json
 import os
 import subprocess
 import time
+import traceback
 
 
 def _timeit(fn, *args, n=3, warmup=1, **kw):
@@ -481,6 +482,111 @@ def fleet_benchmarks(quick: bool = False):
     return out
 
 
+def degraded_ops_benchmarks(quick: bool = False):
+    """Degraded-ops scenario rows (``repro.fleet.scenarios``):
+
+    * Byzantine recovery (full mode) — the ISSUE acceptance scenario: a
+      4-plane fleet with one whole plane sign-flipping its updates
+      (scale 8).  Plain ``mean`` aggregation lets the corrupted plane
+      poison the inter-plane exchange (final loss blows up orders of
+      magnitude); ``trimmed_mean`` / ``median`` drop the outlier
+      coordinate-wise and land within a few percent of the fault-free
+      run.  Final loss = mean of the honest planes' last finite loss.
+    * Eclipse duty sweep — the same fleet energy envelope under 0%,
+      50% and 100% orbital shadow: trained/skipped counts show the
+      shadow reaching the reserve-skip policy through the battery.
+    """
+    import numpy as np
+    from repro.core.energy import PassBudget
+    from repro.core.orbits import OrbitalPlane
+    from repro.core.sl_step import autoencoder_adapter
+    from repro.fleet import (ByzantineConfig, EclipseConfig, FleetConfig,
+                             FleetEngine, ScenarioConfig)
+    from repro.sim.data import DeviceImageryShards
+
+    print("== degraded-ops benchmarks (byzantine planes + eclipse) ==")
+    print("name,us_per_call,derived")
+    out = {}
+    shards = DeviceImageryShards(img=32, batch=4)
+    adapter = autoencoder_adapter(cut=5, img=32)
+
+    if not quick:
+        # --- Byzantine recovery: 1 of 4 planes lies, scale 8 ----------
+        P, N, R = 4, 4, 6
+        budget = PassBudget(plane=OrbitalPlane(n_sats=N), n_items=4e6)
+        byz = ScenarioConfig(byzantine=ByzantineConfig(
+            planes=(3,), mode="sign_flip", scale=8.0))
+
+        def final_loss(res):
+            last = [row[np.isfinite(row)][-1] for row in res.loss[:3]]
+            return float(np.mean(last))
+
+        losses = {}
+        for tag, scn, agg in (("fault_free", None, "mean"),
+                              ("byzantine_mean", byz, "mean"),
+                              ("byzantine_trimmed", byz, "trimmed_mean"),
+                              ("byzantine_median", byz, "median")):
+            cfg = FleetConfig(n_planes=P, n_revolutions=R,
+                              battery_j=5000.0, recharge_w=20.0,
+                              reserve_j=100.0, max_steps_per_pass=4,
+                              seed=0, avg_every=1, scenario=scn,
+                              aggregate=agg)
+
+            def degraded_run(cfg=cfg):
+                eng = FleetEngine(adapter, budget, shards, cfg)
+                return eng, eng.run()
+
+            us, (eng, res) = _timeit(degraded_run, n=1, warmup=0)
+            losses[tag] = final_loss(res)
+            name = f"degraded_ops_{tag}_{P}x{N}"
+            out[name] = dict(us=us, n_passes=P * R * N, aggregate=agg,
+                             final_loss=losses[tag],
+                             host_syncs=eng.host_syncs)
+            print(f"{name},{us:.0f},aggregate={agg},"
+                  f"final_loss={losses[tag]:.4g}")
+        clean = losses["fault_free"]
+        out["degraded_ops_recovery"] = dict(
+            loss_fault_free=clean,
+            loss_byzantine_mean=losses["byzantine_mean"],
+            loss_byzantine_trimmed=losses["byzantine_trimmed"],
+            loss_byzantine_median=losses["byzantine_median"],
+            mean_blowup=losses["byzantine_mean"] / clean,
+            trimmed_gap_pct=100.0
+            * abs(losses["byzantine_trimmed"] - clean) / clean,
+            median_gap_pct=100.0
+            * abs(losses["byzantine_median"] - clean) / clean)
+        print(f"degraded_ops_recovery,-,"
+              f"mean-blowup={losses['byzantine_mean'] / clean:.0f}x,"
+              f"trimmed-gap="
+              f"{out['degraded_ops_recovery']['trimmed_gap_pct']:.1f}%")
+
+    # --- eclipse duty sweep: shadow -> battery -> reserve skips -------
+    ecl_budget = PassBudget(plane=OrbitalPlane(n_sats=4), n_items=4e6)
+    for duty in (0.0, 0.5, 1.0):
+        scn = (None if duty == 0.0 else ScenarioConfig(
+            eclipse=EclipseConfig(period=4, duty=duty, stagger=1)))
+        cfg = FleetConfig(n_planes=2, n_revolutions=3, battery_j=200.0,
+                          recharge_w=0.05, reserve_j=180.0,
+                          max_steps_per_pass=2, seed=0, avg_every=1,
+                          scenario=scn)
+
+        def eclipse_run(cfg=cfg):
+            eng = FleetEngine(adapter, ecl_budget, shards, cfg)
+            return eng.run()
+
+        us, res = _timeit(eclipse_run, n=1, warmup=0)
+        s = res.summary()
+        name = f"degraded_ops_eclipse_duty{int(duty * 100):03d}"
+        out[name] = dict(
+            us=us, n_passes=int(res.action.size), trained=s["trained"],
+            skipped=s["skipped"],
+            energy_spent_j=float(
+                np.asarray(res.energy.energy_spent_j).sum()))
+        print(f"{name},{us:.0f},trained={s['trained']},"
+              f"skipped={s['skipped']}")
+    return out
+
+
 def micro_benchmarks():
     """us/call for the SL step + each kernel's jnp path (CPU; the numbers
     are for regression tracking, not TPU performance claims)."""
@@ -566,9 +672,17 @@ def trend_report(results_dir: str, current: dict, rev: str,
     if candidates:
         _, prev_path, prev = max(candidates, key=lambda t: t[0])
 
+    # errored sections (benchmark code raised; see their recorded
+    # traceback in this run's JSON) are flagged up front — their rows
+    # carry no metrics, so silence here would read as "no regression"
+    errored = sorted(k for k, v in current.items()
+                     if isinstance(v, dict) and v.get("status") == "error")
     report = {"baseline": prev_path and os.path.basename(prev_path),
               "threshold": threshold, "regressions": [],
-              "improvements": []}
+              "improvements": [], "errored_sections": errored}
+    for name in errored:
+        print(f"  ERRORED section '{name}': benchmark raised — metrics "
+              f"missing this run (traceback recorded in JSON)")
     if prev is None:
         print("\n== trend report: no previous BENCH_<rev>.json — baseline "
               "run ==")
@@ -615,20 +729,45 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     t0 = time.time()
-    if args.quick:
-        results = {}
-    else:
+    results = {}
+
+    def section(name, fn, *a, **kw):
+        # one failing section must not take the whole run (and its
+        # BENCH_<rev>.json history entry) down with it: record the
+        # failure as a row so the trend report can flag it
+        try:
+            results[name] = fn(*a, **kw)
+        except Exception as exc:                  # noqa: BLE001
+            tb = traceback.format_exc()
+            print(f"!! benchmark section '{name}' FAILED: {exc!r}")
+            print(tb)
+            results[name] = {"status": "error", "error": repr(exc),
+                             "traceback": tb}
+
+    if not args.quick:
         from benchmarks import paper_tables
-        results = paper_tables.run_all()
-    results["engine"] = engine_benchmarks()
-    results["solver_backend"] = solver_backend_benchmarks(quick=args.quick)
-    results["sweep"] = sweep_benchmarks(quick=args.quick)
-    results["device_sim"] = device_sim_benchmarks(quick=args.quick)
-    results["fleet"] = fleet_benchmarks(quick=args.quick)
-    results["micro"] = micro_benchmarks()
+
+        try:
+            results.update(paper_tables.run_all())
+        except Exception as exc:                  # noqa: BLE001
+            tb = traceback.format_exc()
+            print(f"!! paper tables FAILED: {exc!r}")
+            print(tb)
+            results["paper_tables"] = {"status": "error",
+                                       "error": repr(exc), "traceback": tb}
+    section("engine", engine_benchmarks)
+    section("solver_backend", solver_backend_benchmarks, quick=args.quick)
+    section("sweep", sweep_benchmarks, quick=args.quick)
+    section("device_sim", device_sim_benchmarks, quick=args.quick)
+    section("fleet", fleet_benchmarks, quick=args.quick)
+    section("degraded_ops", degraded_ops_benchmarks, quick=args.quick)
+    section("micro", micro_benchmarks)
+    errored = sorted(k for k, v in results.items()
+                     if isinstance(v, dict) and v.get("status") == "error")
     rev = _git_rev()
     results["meta"] = {"rev": rev, "wall_s": time.time() - t0,
-                       "unix_time": time.time(), "quick": args.quick}
+                       "unix_time": time.time(), "quick": args.quick,
+                       "errored_sections": errored}
 
     os.makedirs("results", exist_ok=True)
     if not args.quick:

@@ -24,7 +24,11 @@ Run:  PYTHONPATH=src python examples/constellation_device_sim.py
       (--small for a fast 64-sat × 4-revolution variant;
        --planes 2 for the 2-plane fleet — combine with
        XLA_FLAGS=--xla_force_host_platform_device_count=2 to watch it
-       shard over two CPU host devices)
+       shard over two CPU host devices;
+       --planes 2 --degraded for the degraded-ops scenario: eclipse
+       windows gating recharge, a Byzantine slot corrupting its pass
+       updates, and epidemic faults spreading along each ring, defended
+       by robust (median/trimmed-mean) inter-plane aggregation)
 """
 import argparse
 import time
@@ -36,7 +40,13 @@ ap.add_argument("--small", action="store_true",
                 help="64 sats x 4 revolutions (fast CPU variant)")
 ap.add_argument("--planes", type=int, default=1,
                 help="orbital planes; >1 runs the sharded fleet engine")
+ap.add_argument("--degraded", action="store_true",
+                help="with --planes >= 2: degraded-ops scenario — "
+                     "eclipse windows, one Byzantine slot and epidemic "
+                     "faults, robust inter-plane aggregation")
 args = ap.parse_args()
+if args.degraded and args.planes < 2:
+    ap.error("--degraded is a fleet scenario: use --planes >= 2")
 
 import jax  # noqa: E402
 
@@ -64,13 +74,30 @@ t0 = time.time()
 if planes > 1:
     from repro.fleet import FleetConfig, FleetEngine
 
+    scenario, aggregate = None, "mean"
+    if args.degraded:
+        from repro.fleet import (ByzantineConfig, EclipseConfig,
+                                 EpidemicConfig, ScenarioConfig)
+
+        # half the orbit in shadow, one lying slot on plane 0, and a
+        # transient fault epidemic seeded at slot 0 — defended by the
+        # robust inter-plane exchange (trimmed-mean needs > 2 planes)
+        scenario = ScenarioConfig(
+            eclipse=EclipseConfig(period=4, duty=0.5, stagger=1),
+            byzantine=ByzantineConfig(slots={0: [1]}, mode="sign_flip",
+                                      scale=1.0),
+            epidemic=EpidemicConfig(beta=0.3, ttl=2, init_slots=(0,)))
+        aggregate = "trimmed_mean" if planes > 2 else "median"
+
     engine = FleetEngine(adapter, budget, shards, FleetConfig(
         n_planes=planes, n_revolutions=n_revolutions, avg_every=1,
-        **energy_knobs))
+        scenario=scenario, aggregate=aggregate, **energy_knobs))
     mesh = dict(zip(engine.mesh.axis_names, engine.mesh.devices.shape))
     layout = (f"fleet layout ({planes}, {n_sats}) sharded over mesh "
               f"{mesh}; inter-plane checkpoint averaging every "
               "revolution")
+    if args.degraded:
+        layout += f" (degraded-ops scenario, aggregate={aggregate})"
 else:
     engine = DeviceConstellationSim(adapter, budget, shards,
                                     DeviceSimConfig(
@@ -93,10 +120,16 @@ print(f"\n{'rev':>4} {'trained':>8} {'skipped':>8} {'mean loss':>10} "
       f"{'battery J (min/med/max)':>24} {'s/rev':>6}")
 t_rev = time.time()
 last_loss = float("nan")
+faulted_total = 0
 for rev in range(n_revolutions):
     res = engine.run(1, stream_telemetry=True)   # ONE host sync per rev
     bat = np.asarray(res.energy.battery_j)
     trained = res.action != ACTION_SKIPPED
+    if args.degraded:
+        from repro.sim.device_sim import ACTION_FAULT
+        faulted = res.action == ACTION_FAULT
+        faulted_total += int(faulted.sum())
+        trained = trained & ~faulted
     loss = np.nanmean(res.loss) if trained.any() else float("nan")
     if np.isfinite(loss):
         last_loss = loss
@@ -118,6 +151,10 @@ print(f"  batteries       min {float(np.asarray(es.battery_j).min()):.1f} J"
       f" / max {float(np.asarray(es.battery_j).max()):.1f} J")
 print(f"  train steps     {int(np.asarray(engine.state.step).sum())} fused "
       f"(last trained-revolution loss {last_loss:.4f})")
+if args.degraded:
+    print(f"  degraded ops    {faulted_total} epidemic-faulted passes; "
+          f"robust aggregate={engine.cfg.aggregate} over "
+          f"{planes} planes")
 print(f"\nhost contact: {engine.traces} jit trace, "
       f"{engine.device_calls} dispatches, {engine.host_syncs} telemetry "
       f"syncs for {planes * n_sats * n_revolutions} passes "

@@ -27,6 +27,11 @@ else
     # revolution, host-vs-fleet parity asserted per plane
     echo "== fleet smoke (2-plane elastic fleet on a 2-device mesh) =="
     python -m repro.fleet
+    # degraded-ops smoke: eclipse + one Byzantine slot + epidemic
+    # faults with robust aggregation, bit-exact host-prefix action
+    # parity, <= 1 host sync per revolution
+    echo "== degraded-ops smoke (eclipse + byzantine + epidemic) =="
+    python -m repro.fleet --scenario degraded
 fi
 
 echo "== quick benchmark smoke (solver backends + sweep + closed loop) =="

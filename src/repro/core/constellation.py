@@ -85,7 +85,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import resource_opt
-from repro.core.energy import PassBudget, SplitCosts, clamp_battery
+from repro.core.energy import (PassBudget, SplitCosts, clamp_battery,
+                               solar_recharge_j)
+from repro.fleet.events import leave_ids
 from repro.core.mission import RevolutionPlanner
 from repro.core.orbits import OrbitalPlane
 from repro.core.sl_step import (SplitAdapter, make_boundary_meter,
@@ -147,7 +149,16 @@ class ConstellationConfig:
     seed: int = 0
     handoff_dir: Optional[str] = None    # persist handoffs (fault tolerance)
     join_events: Dict[int, int] = dataclasses.field(default_factory=dict)
-    leave_events: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # pass -> satellite id(s) leaving at that pass: a single int or a
+    # sequence of ids (multi-leave churn), resolved ``sid % len(sats)``
+    leave_events: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    # orbital shadow windows gating solar recharge: any object with a
+    # ``sunlit(pass_idx, plane)`` method — canonically a
+    # :class:`repro.fleet.scenarios.EclipseConfig` (duck-typed here so
+    # the core scheduler does not depend on the fleet layer); None =
+    # permanent sunlight.  Device delegation threads it into the fleet
+    # engine's scenario, so host and device gate identically.
+    eclipse: Optional[Any] = None
     # Simulation-cost ceiling on fused steps per pass.  The allocation
     # itself is uncapped (problem 13 decides the item budget); this only
     # bounds how many of those steps the simulator executes when a
@@ -278,8 +289,8 @@ class ConstellationSim:
                                       cfg.battery_j),
                         joined_pass=k))
             if k in cfg.leave_events:
-                sid = cfg.leave_events[k] % len(self.sats)
-                self.sats[sid].alive = False
+                for sid in leave_ids(cfg.leave_events[k]):
+                    self.sats[sid % len(self.sats)].alive = False
 
             # the ring that serves pass k — recharge accounting below is
             # against THIS snapshot, so a satellite joining at a later
@@ -290,13 +301,16 @@ class ConstellationSim:
             rec = self._run_pass(k, sat)
             self.records.append(rec)
             # solar recharge between passes, for this pass's members only
-            # (a sat that failed mid-pass is dead: no recharge either)
+            # (a sat that failed mid-pass is dead: no recharge either;
+            # an eclipsed pass harvests exactly 0 J)
+            sunlit = cfg.eclipse is None or bool(cfg.eclipse.sunlit(k, 0))
+            gain = solar_recharge_j(cfg.recharge_w,
+                                    self.budget.plane.pass_duration_s,
+                                    sunlit)
             for s in ring:
                 if s.alive:
-                    s.battery_j = clamp_battery(
-                        s.battery_j + cfg.recharge_w
-                        * self.budget.plane.pass_duration_s,
-                        cfg.battery_j)
+                    s.battery_j = clamp_battery(s.battery_j + gain,
+                                                cfg.battery_j)
             rec.battery_j = sat.battery_j     # telemetry (device parity)
         return self.records
 
@@ -407,6 +421,8 @@ class ConstellationSim:
             blockers.append("checkpoint handoffs (handoff_dir)")
         if any(not s.alive for s in self.sats):
             blockers.append("dead satellites in the ring")
+        if cfg.eclipse is not None:
+            blockers.append("eclipse windows (fleet scenario feature)")
         if blockers:
             raise ValueError(
                 "the device engine runs static steady-state rings only; "
@@ -475,6 +491,7 @@ class ConstellationSim:
         ``fail_prob``, dead satellites) run on the fleet engine."""
         cfg = self.cfg
         if (cfg.join_events or cfg.leave_events or cfg.fail_prob
+                or cfg.eclipse is not None
                 or any(not s.alive for s in self.sats)):
             return self._run_fleet_device()
         engine = self.as_device_sim()
@@ -505,11 +522,16 @@ class ConstellationSim:
         plan-row → record mapping shared by the static and fleet
         delegation folds.  ``sel`` indexes the plan's row for this slot
         (``s`` for (N,) plans, ``(0, s)`` for fleet (P, M) plans)."""
-        from repro.sim.device_sim import (ACTION_FAILED, ACTION_NAMES,
-                                          ACTION_SKIPPED)
+        from repro.sim.device_sim import (ACTION_FAILED, ACTION_FAULT,
+                                          ACTION_NAMES, ACTION_SKIPPED)
 
         if code == ACTION_FAILED:
             return PassRecord(pass_idx, sat_id, "failed",
+                              battery_j=battery_j)
+        if code == ACTION_FAULT:
+            # transient epidemic fault: a masked no-op pass — no energy,
+            # no loss; the slot recovers after its ttl expires
+            return PassRecord(pass_idx, sat_id, "faulted",
                               battery_j=battery_j)
         if code == ACTION_SKIPPED:
             return PassRecord(pass_idx, sat_id, "skipped_energy",
@@ -541,6 +563,7 @@ class ConstellationSim:
         """
         from repro.fleet import FleetConfig, FleetEngine, \
             build_event_schedule
+        from repro.fleet.scenarios import ScenarioConfig
 
         cfg = self.cfg
         if cfg.handoff_dir is not None:
@@ -574,7 +597,9 @@ class ConstellationSim:
             max_steps_per_pass=cfg.max_steps_per_pass, seed=cfg.seed,
             fail_prob=cfg.fail_prob, join_events=dict(cfg.join_events),
             leave_events=dict(cfg.leave_events),
-            join_battery_frac=cfg.join_battery_frac, avg_every=0)
+            join_battery_frac=cfg.join_battery_frac, avg_every=0,
+            scenario=(ScenarioConfig(eclipse=cfg.eclipse)
+                      if cfg.eclipse is not None else None))
         engine = FleetEngine(
             self.adapter, self.budget, self.data_for_sat, fcfg,
             state=self.state, schedule=schedule,
@@ -619,6 +644,7 @@ class ConstellationSim:
             "trained": len(trained),
             "skipped": sum(r.action == "skipped_energy" for r in recs),
             "failed": sum(r.action == "failed" for r in recs),
+            "faulted": sum(r.action == "faulted" for r in recs),
             "loss_first": trained[0].loss if trained else None,
             "loss_last": trained[-1].loss if trained else None,
             "E_total_J": sum(r.e_total_j for r in recs),

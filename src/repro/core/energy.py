@@ -51,6 +51,21 @@ def clamp_battery(battery, capacity_j):
     return jnp.clip(battery, 0.0, capacity_j)
 
 
+def solar_recharge_j(recharge_w: float, duration_s: float,
+                     sunlit: bool = True) -> float:
+    """Energy harvested between passes: panel power × pass duration,
+    exactly 0 J while the plane is in eclipse.
+
+    The host-side counterpart of the device engine's ``sunlit`` gate in
+    :func:`repro.sim.energy_state.recharge` — both add either the full
+    ``recharge_w * duration_s`` or a literal 0.0 before clamping, so an
+    eclipse window can never perturb host/device battery parity by a
+    rounding step.  Shadow geometry (which passes are eclipsed) lives
+    in :class:`repro.fleet.scenarios.EclipseConfig`.
+    """
+    return float(recharge_w) * float(duration_s) * (1.0 if sunlit else 0.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class SplitCosts:
     """The four orbit-aware cost terms of a split plan at one cut point.

@@ -1,18 +1,28 @@
 """Sharded elastic fleet engine: multi-plane constellations on a mesh.
 
-See :mod:`repro.fleet.engine` for the closed loop and
+See :mod:`repro.fleet.engine` for the closed loop,
 :mod:`repro.fleet.events` for the precomputed membership/failure
 schedules that make elastic runs device-resident while keeping the host
 :class:`~repro.core.constellation.ConstellationSim` as the parity
-oracle.
+oracle, and :mod:`repro.fleet.scenarios` for the degraded-ops scenario
+engine (eclipse windows, Byzantine satellites + robust aggregation,
+epidemic fault propagation) composing inside the same jitted scan.
 """
 from repro.fleet.engine import (FleetConfig, FleetEngine, FleetResult,
                                 FleetTelemetry, average_planes)
 from repro.fleet.events import (EventSchedule, build_event_schedule,
-                                static_schedule)
+                                leave_ids, static_schedule)
+from repro.fleet.scenarios import (ByzantineConfig, EclipseConfig,
+                                   EpidemicConfig, ScenarioConfig,
+                                   ScenarioSchedule, aggregate_planes,
+                                   build_scenario_schedule,
+                                   epidemic_oracle, oracle_actions)
 
 __all__ = [
     "FleetConfig", "FleetEngine", "FleetResult", "FleetTelemetry",
     "average_planes", "EventSchedule", "build_event_schedule",
-    "static_schedule",
+    "leave_ids", "static_schedule",
+    "ByzantineConfig", "EclipseConfig", "EpidemicConfig",
+    "ScenarioConfig", "ScenarioSchedule", "aggregate_planes",
+    "build_scenario_schedule", "epidemic_oracle", "oracle_actions",
 ]

@@ -54,9 +54,12 @@ from repro.core.sl_step import (SplitAdapter, dedupe_state_buffers,
                                 make_pass_step)
 from repro.core.train_state import SLTrainState
 from repro.fleet.events import EventSchedule, build_event_schedule
+from repro.fleet.scenarios import (ScenarioConfig, aggregate_planes,
+                                   build_scenario_schedule,
+                                   epidemic_step as scn_epidemic_step)
 from repro.launch.mesh import make_fleet_mesh, plane_sharding
 from repro.sim import energy_state as es_mod
-from repro.sim.device_sim import (ACTION_FAILED, ACTION_SHED,
+from repro.sim.device_sim import (ACTION_FAILED, ACTION_FAULT, ACTION_SHED,
                                   ACTION_SKIPPED, ACTION_TRAINED,
                                   DevicePassPlan, measure_and_plan)
 from repro.sim.energy_state import EnergyState
@@ -92,12 +95,22 @@ class FleetConfig:
     join_events: Dict[int, int] = dataclasses.field(default_factory=dict)
     leave_events: Dict[int, int] = dataclasses.field(default_factory=dict)
     join_battery_frac: float = 1.0
+    # seed+p failure streams (host-parity default) vs collision-free
+    # SeedSequence.spawn streams — see fleet/events.py
+    legacy_streams: bool = True
     # ---- fleet structure ----------------------------------------------
     # passes per revolution (telemetry/streaming/averaging granularity);
     # None = the initial ring size
     passes_per_revolution: Optional[int] = None
     # inter-plane checkpoint averaging period, in revolutions; 0 = off
     avg_every: int = 1
+    # ---- degraded-ops scenario (fleet/scenarios.py) -------------------
+    # eclipse windows + Byzantine slots + epidemic faults; None = the
+    # cooperative, permanently-sunlit baseline (host-parity default)
+    scenario: Optional[ScenarioConfig] = None
+    # inter-plane aggregation: "mean" (parity default) | "median" |
+    # "trimmed_mean" — see fleet/scenarios.aggregate_planes
+    aggregate: str = "mean"
 
 
 class FleetTelemetry(NamedTuple):
@@ -108,24 +121,16 @@ class FleetTelemetry(NamedTuple):
     loss: Any                 # float32 mean loss (NaN unless trained)
     battery_j: Any            # float32 serving sat battery at pass end
     n_steps: Any              # int32 fused steps executed
+    n_infected: Any           # int32 epidemic-faulted slots this pass
 
 
 def average_planes(tree):
-    """Inter-plane checkpoint averaging over the leading plane axis.
-
-    Float leaves are replaced by their plane-mean (broadcast back, so
-    shapes/shardings are preserved — under the fleet mesh this lowers
-    to an all-reduce over the ``plane`` axis, the inter-plane ISL
-    exchange); integer leaves (step counters, optimizer step schedules)
-    stay per-plane.
-    """
-    def avg(x):
-        if jnp.issubdtype(x.dtype, jnp.floating):
-            return jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
-                                    x.shape)
-        return x
-
-    return jax.tree.map(avg, tree)
+    """Inter-plane checkpoint averaging over the leading plane axis —
+    the ``mode="mean"`` case of
+    :func:`repro.fleet.scenarios.aggregate_planes` (kept as the named
+    parity default; robust runs select ``median`` / ``trimmed_mean``
+    via ``FleetConfig.aggregate``)."""
+    return aggregate_planes(tree, "mean")
 
 
 @dataclasses.dataclass
@@ -141,9 +146,11 @@ class FleetResult:
     loss: np.ndarray          # (P, K) NaN unless trained
     battery_j: np.ndarray     # (P, K) serving sat battery at pass end
     n_steps: np.ndarray       # (P, K)
+    n_infected: np.ndarray    # (P, K) epidemic-faulted slots per pass
     plan: DevicePassPlan      # (P, M) host copies
     energy: EnergyState       # (P, M) final fleet state, host copies
     failed: np.ndarray        # (P, M) final failure mask
+    fault_ttl: np.ndarray     # (P, M) final epidemic recovery counters
     state: Any                # final SLTrainState, (P, ...) leaves
 
     def summary(self) -> Dict[str, Any]:
@@ -161,6 +168,7 @@ class FleetResult:
             "trained": int(trained.sum()),
             "skipped": int((self.action == ACTION_SKIPPED).sum()),
             "failed": int((self.action == ACTION_FAILED).sum()),
+            "faulted": int((self.action == ACTION_FAULT).sum()),
             "loss_first": float(losses[0]) if losses.size else None,
             "loss_last": float(losses[-1]) if losses.size else None,
             "E_total_J": float(self.plan.e_total_j[p_idx, sats].sum()),
@@ -215,13 +223,16 @@ class FleetEngine:
                 self.n_initial, self.n_passes,
                 join_events=cfg.join_events, leave_events=cfg.leave_events,
                 fail_prob=cfg.fail_prob, n_planes=self.n_planes,
-                seed=cfg.seed)
+                seed=cfg.seed, legacy_streams=cfg.legacy_streams)
         if schedule.n_planes != self.n_planes:
             raise ValueError(f"schedule covers {schedule.n_planes} planes "
                              f"but the fleet has {self.n_planes}")
         self.schedule = schedule
         self.n_slots = schedule.n_slots
         P, M = self.n_planes, self.n_slots
+        aggregate_planes({}, cfg.aggregate)   # validate the mode early
+        self.scenario_schedule = build_scenario_schedule(
+            cfg.scenario, P, M, schedule.n_passes, seed=cfg.seed)
 
         self.optimizer = resolve_optimizer(cfg.optimizer, lr=cfg.lr)
         if state is None:
@@ -277,6 +288,12 @@ class FleetEngine:
         self._fail_mask = put(jnp.asarray(schedule.fail_mask))
         self._batch_idx = put(jnp.zeros((P,), jnp.int32))
         self._pass_idx = jnp.zeros((), jnp.int32)
+        # epidemic recovery counters ride the carry; the precomputed
+        # spread draws and the static Byzantine mask ship as sharded
+        # inputs so the scan reads its own plane's rows
+        self._ttl = put(jnp.zeros((P, M), jnp.int32))
+        self._spread = put(jnp.asarray(self.scenario_schedule.spread_draw))
+        self._byz = put(jnp.asarray(self.scenario_schedule.byz_mask))
         self.plan = put(self.plan)
 
         self._pass_step = make_pass_step(
@@ -310,13 +327,66 @@ class FleetEngine:
         plane_ids = jnp.arange(P, dtype=jnp.int32)
         join_pass = jnp.asarray(self.schedule.join_pass, jnp.int32)
         leave_pass = jnp.asarray(self.schedule.leave_pass, jnp.int32)
+        # static scenario structure (Python-level: absent stressors are
+        # dead code, so a scenario-free fleet compiles to the same
+        # program as before)
+        scn = cfg.scenario
+        eclipse = None if scn is None else scn.eclipse
+        byz_cfg = None if scn is None else scn.byzantine
+        epidemic = None if scn is None else scn.epidemic
+        init_mask = jnp.asarray(self.scenario_schedule.init_mask)
+        fail_prob = float(cfg.fail_prob)
+        # stateless streams for beyond-horizon draws: fold_in on the
+        # pass index (and plane) means chained runs need no RNG carry
+        base_key = jax.random.key(np.uint32(cfg.seed))
+        fail_key = jax.random.fold_in(base_key, 1)
+        spread_key = jax.random.fold_in(base_key, 2)
+        noise_key = jax.random.fold_in(base_key, 3)
 
-        def closed_loop(state, energy, failed, bidx, k, plan, fail_mask):
+        def corrupt_params(new_tree, old_tree, lie, plane, k, salt):
+            """Byzantine injection at the pass kernel: where ``lie``,
+            replace the pass delta Δ with -scale·Δ (sign_flip) or add
+            scale·N(0,1) per float leaf (scaled_noise)."""
+            scale = jnp.float32(byz_cfg.scale)
+            leaves, treedef = jax.tree.flatten(new_tree)
+            old_leaves = jax.tree.leaves(old_tree)
+            out = []
+            for i, (new, old) in enumerate(zip(leaves, old_leaves)):
+                if not jnp.issubdtype(new.dtype, jnp.floating):
+                    out.append(new)
+                    continue
+                if byz_cfg.mode == "sign_flip":
+                    bad = old - scale * (new - old)
+                else:       # scaled_noise
+                    kk = jax.random.fold_in(jax.random.fold_in(
+                        jax.random.fold_in(noise_key, k), plane),
+                        2 * i + salt)
+                    bad = new + scale * jax.random.normal(
+                        kk, new.shape, new.dtype)
+                out.append(jnp.where(lie, bad, new))
+            return jax.tree.unflatten(treedef, out)
+
+        def closed_loop(state, energy, failed, ttl, bidx, k, plan,
+                        fail_mask, spread, byz):
             self.traces += 1        # side effect fires at trace time
 
-            def plane_pass(plane, fail_k, state, energy, failed, bidx,
-                           plan, k):
-                # membership first, exactly like the host scheduler:
+            def plane_pass(plane, fail_k, spread_k, byz_row, state,
+                           energy, failed, ttl, bidx, plan, k):
+                # epidemic dynamics first: faults spread along the slot
+                # ring gated by the precomputed prefix draws, or by
+                # in-scan jax.random draws beyond the horizon — chained
+                # runs stay fault-active
+                faulted_m = jnp.zeros((M,), bool)
+                if epidemic is not None:
+                    live = jax.random.uniform(
+                        jax.random.fold_in(
+                            jax.random.fold_in(spread_key, k), plane),
+                        (M,)) < epidemic.beta
+                    draw = jnp.where(k < horizon, spread_k, live)
+                    faulted_m, ttl = scn_epidemic_step(
+                        ttl, draw, k, epidemic, init_mask, xp=jnp)
+
+                # membership next, exactly like the host scheduler:
                 # joins and leaves apply at pass start, then the serving
                 # slot is ring[k % len(ring)] over the alive slots in
                 # slot order
@@ -329,10 +399,12 @@ class FleetEngine:
                                   & member).astype(jnp.int32)
 
                 # the host's decision order: seeded failure draw, then
-                # the reserve-skip policy, then the planned masked pass
+                # the transient epidemic fault, then the reserve-skip
+                # policy, then the planned masked pass
                 fail = served & fail_k
+                fault = served & ~fail & faulted_m[slot]
                 skip = energy.battery_j[slot] < reserve
-                trains = served & ~fail & ~skip
+                trains = served & ~fail & ~fault & ~skip
                 n_valid = jnp.where(trains,
                                     jnp.minimum(plan.n_steps[slot], K), 0)
 
@@ -341,6 +413,7 @@ class FleetEngine:
                                      batch_fn(plane * M + slot, bidx + j),
                                      j < n_valid)
 
+                old_state = state
                 state, losses = jax.lax.scan(step_body, state, step_ids)
                 valid = step_ids < n_valid
                 loss = jnp.where(
@@ -349,21 +422,41 @@ class FleetEngine:
                     / jnp.maximum(n_valid, 1).astype(jnp.float32),
                     jnp.nan)
 
+                if byz_cfg is not None:
+                    # a Byzantine serving slot corrupts the update its
+                    # pass just produced (params only; its optimizer
+                    # state stays the honest trajectory's)
+                    lie = byz_row[slot] & trains
+                    state = state.replace(
+                        params_a=corrupt_params(
+                            state.params_a, old_state.params_a, lie,
+                            plane, k, 0),
+                        params_b=corrupt_params(
+                            state.params_b, old_state.params_b, lie,
+                            plane, k, 1))
+
                 failed = failed.at[slot].set(failed[slot] | fail)
                 energy = es_mod.apply_pass(
                     energy, slot, plan.drain_j[slot],
                     plan.e_total_j[slot], cap, trains,
-                    skipped=served & ~fail & skip)
+                    skipped=served & ~fail & ~fault & skip)
                 # recharge this pass's members that are still alive (a
-                # slot that just failed collects nothing — it is dead)
+                # slot that just failed collects nothing — it is dead);
+                # an eclipsed plane harvests nothing at all, which is
+                # how orbital shadow reaches the reserve-skip policy
+                sunlit = (None if eclipse is None
+                          else eclipse.sunlit(k, plane))
                 energy = es_mod.recharge(energy, recharge_j, cap,
-                                         member_mask=member & ~failed)
+                                         member_mask=member & ~failed,
+                                         sunlit=sunlit)
                 bidx = bidx + n_valid
                 action = jnp.where(
                     ~served | fail, ACTION_FAILED,
-                    jnp.where(skip, ACTION_SKIPPED,
-                              jnp.where(plan.kept_fraction[slot] < 1.0,
-                                        ACTION_SHED, ACTION_TRAINED))
+                    jnp.where(fault, ACTION_FAULT,
+                              jnp.where(skip, ACTION_SKIPPED,
+                                        jnp.where(
+                                            plan.kept_fraction[slot] < 1.0,
+                                            ACTION_SHED, ACTION_TRAINED)))
                 ).astype(jnp.int32)
                 telem = FleetTelemetry(
                     action=action,
@@ -371,42 +464,53 @@ class FleetEngine:
                     loss=loss,
                     battery_j=jnp.where(served, energy.battery_j[slot],
                                         jnp.nan),
-                    n_steps=n_valid)
-                return (state, energy, failed, bidx), telem
+                    n_steps=n_valid,
+                    n_infected=faulted_m.sum().astype(jnp.int32))
+                return (state, energy, failed, ttl, bidx), telem
 
             vpass = jax.vmap(plane_pass,
-                             in_axes=(0, 0, 0, 0, 0, 0, 0, None))
+                             in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))
 
             def pass_body(carry, _):
-                state, energy, failed, bidx, k = carry
-                # beyond the precomputed horizon no scheduled failure
-                # fires (the clip would otherwise replay the last draw)
+                state, energy, failed, ttl, bidx, k = carry
+                # scheduled failures fire inside the precomputed prefix
+                # (bit-parity with the host oracle); beyond it the
+                # stream refreshes from jax.random so chained runs keep
+                # drawing failures at the same rate
                 fail_k = (jnp.take(fail_mask,
                                    jnp.minimum(k, horizon - 1), axis=1)
                           & (k < horizon))
-                (state, energy, failed, bidx), telem = vpass(
-                    plane_ids, fail_k, state, energy, failed, bidx,
-                    plan, k)
-                return (state, energy, failed, bidx, k + 1), telem
+                if fail_prob > 0.0:
+                    live = jax.random.uniform(
+                        jax.random.fold_in(fail_key, k), (P,)) < fail_prob
+                    fail_k = fail_k | (live & (k >= horizon))
+                spread_k = jnp.take(
+                    spread, jnp.minimum(k, spread.shape[1] - 1), axis=1)
+                (state, energy, failed, ttl, bidx), telem = vpass(
+                    plane_ids, fail_k, spread_k, byz, state, energy,
+                    failed, ttl, bidx, plan, k)
+                return (state, energy, failed, ttl, bidx, k + 1), telem
 
             def rev_body(carry, _):
                 carry, telem = jax.lax.scan(pass_body, carry, None,
                                             length=L)
-                state, energy, failed, bidx, k = carry
+                state, energy, failed, ttl, bidx, k = carry
                 if avg_every > 0 and P > 1:
-                    # inter-plane ISL exchange at the revolution boundary
+                    # inter-plane ISL exchange at the revolution
+                    # boundary — robust modes (median / trimmed_mean)
+                    # are what survive Byzantine planes
                     do = (k // L) % avg_every == 0
                     state = jax.tree.map(
                         lambda a, o: jnp.where(do, a, o),
-                        average_planes(state), state)
-                return (state, energy, failed, bidx, k), telem
+                        aggregate_planes(state, cfg.aggregate), state)
+                return (state, energy, failed, ttl, bidx, k), telem
 
             carry, telem = jax.lax.scan(
-                rev_body, (state, energy, failed, bidx, k), None,
+                rev_body, (state, energy, failed, ttl, bidx, k), None,
                 length=n_revolutions)
             return carry + (telem,)
 
-        fn = jax.jit(closed_loop, donate_argnums=(0, 1, 2, 3))
+        fn = jax.jit(closed_loop, donate_argnums=(0, 1, 2, 3, 4))
         self._fns[n_revolutions] = fn
         return fn
 
@@ -428,17 +532,18 @@ class FleetEngine:
         state = dedupe_state_buffers(self.state)
         self.state.mark_consumed()
         energy, failed = self.energy, self._failed
-        bidx, k = self._batch_idx, self._pass_idx
+        ttl, bidx, k = self._ttl, self._batch_idx, self._pass_idx
 
         chunks = []
         fn = self._compiled(1 if stream_telemetry else R)
         for _ in range(R if stream_telemetry else 1):
-            state, energy, failed, bidx, k, telem = fn(
-                state, energy, failed, bidx, k, self.plan, self._fail_mask)
+            state, energy, failed, ttl, bidx, k, telem = fn(
+                state, energy, failed, ttl, bidx, k, self.plan,
+                self._fail_mask, self._spread, self._byz)
             # commit the carry per dispatch: an interrupted streaming
             # study keeps every completed revolution and stays chainable
             self.state, self.energy, self._failed = state, energy, failed
-            self._batch_idx, self._pass_idx = bidx, k
+            self._ttl, self._batch_idx, self._pass_idx = ttl, bidx, k
             self.device_calls += 1
             chunks.append(jax.tree.map(np.asarray, telem))  # the ONE sync
             self.host_syncs += 1
@@ -451,9 +556,11 @@ class FleetEngine:
             action=flat(telem.action), sat=flat(telem.sat),
             loss=flat(telem.loss), battery_j=flat(telem.battery_j),
             n_steps=flat(telem.n_steps),
+            n_infected=flat(telem.n_infected),
             plan=DevicePassPlan(*[np.asarray(a) for a in self.plan]),
             energy=EnergyState(*[np.asarray(a) for a in energy]),
-            failed=np.asarray(failed), state=state)
+            failed=np.asarray(failed), fault_ttl=np.asarray(ttl),
+            state=state)
 
 
 def _smoke(n_sats: int = 8, n_planes: int = 2,

@@ -23,6 +23,15 @@ into an :class:`EventSchedule` of fixed-shape arrays:
   the host oracle consumes one draw at a time (``Generator.random()``
   sequential draws equal one array draw), realized as booleans on the
   host so f32/f64 threshold rounding can never flip a decision.
+  ``legacy_streams=False`` replaces the ``seed + p`` derivation with
+  ``np.random.SeedSequence(seed).spawn(n_planes)`` — ``seed + p``
+  collides across runs ((seed=0, plane=1) is bit-identical to
+  (seed=1, plane=0)), which spawned sequences can never do.  Legacy
+  stays the default because the host oracle is a per-plane
+  ``ConstellationSim(seed=seed + p)``; spawned streams have no host
+  counterpart (scalar ``Generator``s cannot consume them draw-by-draw
+  with the same arithmetic), so parity-checked runs keep legacy and
+  fleet-only studies opt into collision-free streams.
 
 Inside the scan, slot ``m`` is alive at pass ``k`` iff
 ``join_pass[m] <= k < leave_pass[m]`` and it has not failed (the
@@ -33,7 +42,7 @@ Inside the scan, slot ``m`` is alive at pass ``k`` iff
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Sequence
+from typing import Any, Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -56,6 +65,8 @@ class EventSchedule:
     fail_mask: np.ndarray           # (P, K) bool, seeded per plane
     fail_prob: float
     seed: int
+    legacy_streams: bool = True     # seed+p streams (host-parity) vs
+                                    # SeedSequence.spawn (collision-free)
 
     @property
     def n_planes(self) -> int:
@@ -70,21 +81,35 @@ class EventSchedule:
         return member
 
 
+def leave_ids(value) -> list:
+    """Normalize one ``leave_events`` value — a single satellite id or a
+    sequence of them — into a list of ints (host + device engines share
+    this, so a multi-leave pass resolves identically in both)."""
+    if isinstance(value, (int, np.integer)):
+        return [int(value)]
+    return [int(v) for v in value]
+
+
 def build_event_schedule(n_initial: int, n_passes: int, *,
                          join_events: Optional[Mapping[int, int]] = None,
-                         leave_events: Optional[Mapping[int, int]] = None,
+                         leave_events: Optional[Mapping[int, Any]] = None,
                          fail_prob: float = 0.0, n_planes: int = 1,
-                         seed: int = 0) -> EventSchedule:
+                         seed: int = 0,
+                         legacy_streams: bool = True) -> EventSchedule:
     """Replay the host scheduler's event semantics into fixed arrays.
 
     Mirrors ``ConstellationSim.run`` pass for pass: at pass ``k`` joins
-    are appended first (slot id = current total count), then a leave
-    event resolves ``sid % <total count>`` — so a leave targeting a
-    yet-to-join slot id behaves identically in both engines.  Plane
-    ``p``'s failure stream is drawn from ``default_rng(seed + p)``, one
-    draw per pass whether or not it fires — matching the host oracle's
-    per-pass ``rng.random()`` consumption exactly (the host sim for
-    plane ``p`` must therefore run with ``seed + p``).
+    are appended first (slot id = current total count), then each leave
+    event — a single id or a sequence of ids (``Mapping[int, int |
+    Sequence[int]]``) — resolves ``sid % <total count>``, so a leave
+    targeting a yet-to-join slot id behaves identically in both
+    engines.  With ``legacy_streams=True`` plane ``p``'s failure stream
+    is drawn from ``default_rng(seed + p)``, one draw per pass whether
+    or not it fires — matching the host oracle's per-pass
+    ``rng.random()`` consumption exactly (the host sim for plane ``p``
+    must therefore run with ``seed + p``); ``legacy_streams=False``
+    draws each plane from a ``SeedSequence(seed).spawn(n_planes)``
+    child, which no other (seed, plane) pair can collide with.
     """
     join_events = dict(join_events or {})
     leave_events = dict(leave_events or {})
@@ -94,18 +119,24 @@ def build_event_schedule(n_initial: int, n_passes: int, *,
         for _ in range(int(join_events.get(k, 0))):
             join_pass.append(k)
         if k in leave_events:
-            leaves.append((k, int(leave_events[k]) % len(join_pass)))
+            for sid in leave_ids(leave_events[k]):
+                leaves.append((k, sid % len(join_pass)))
     n_slots = len(join_pass)
     leave_pass = np.full((n_slots,), NEVER, np.int32)
     for k, sid in leaves:
         leave_pass[sid] = min(int(leave_pass[sid]), k)
+    if legacy_streams:
+        streams = [seed + p for p in range(int(n_planes))]
+    else:
+        streams = np.random.SeedSequence(int(seed)).spawn(int(n_planes))
     fail_mask = np.stack([
-        np.random.default_rng(seed + p).random(int(n_passes)) < fail_prob
-        for p in range(int(n_planes))])
+        np.random.default_rng(s).random(int(n_passes)) < fail_prob
+        for s in streams])
     return EventSchedule(
         n_initial=int(n_initial), n_slots=n_slots, n_passes=int(n_passes),
         join_pass=np.asarray(join_pass, np.int32), leave_pass=leave_pass,
-        fail_mask=fail_mask, fail_prob=float(fail_prob), seed=int(seed))
+        fail_mask=fail_mask, fail_prob=float(fail_prob), seed=int(seed),
+        legacy_streams=bool(legacy_streams))
 
 
 def static_schedule(n_sats: int, n_passes: int,

@@ -69,8 +69,10 @@ ACTION_TRAINED = 0
 ACTION_SHED = 1
 ACTION_SKIPPED = 2
 ACTION_FAILED = 3          # fleet engine only: a static ring cannot fail
+ACTION_FAULT = 4           # fleet scenarios only: transient epidemic fault
 ACTION_NAMES = {ACTION_TRAINED: "trained", ACTION_SHED: "shed",
-                ACTION_SKIPPED: "skipped_energy", ACTION_FAILED: "failed"}
+                ACTION_SKIPPED: "skipped_energy", ACTION_FAILED: "failed",
+                ACTION_FAULT: "faulted"}
 
 
 class DevicePassPlan(NamedTuple):

@@ -56,15 +56,24 @@ def init_energy_state(n_sats: int, battery_j: float) -> EnergyState:
 
 
 def recharge(state: EnergyState, energy_j, capacity_j,
-             member_mask: Optional[Any] = None) -> EnergyState:
+             member_mask: Optional[Any] = None,
+             sunlit: Optional[Any] = None) -> EnergyState:
     """Solar recharge between passes, clamped at capacity.
 
     ``member_mask`` (bool ``(N,)``) limits recharge to the satellites
     that were ring members during the pass; None recharges the whole
     (static) ring — the device engine's case.
+
+    ``sunlit`` (bool scalar, traceable) gates the whole plane's solar
+    input: during an eclipse window (False) no energy is harvested and
+    batteries only drain — which is how the scenario engine couples
+    orbital shadow into the reserve-skip policy.  None (the default)
+    means permanent sunlight, the pre-scenario behavior.
     """
-    gain = energy_j if member_mask is None else \
-        jnp.where(member_mask, energy_j, 0.0)
+    gain = energy_j if sunlit is None else \
+        jnp.where(sunlit, energy_j, 0.0)
+    if member_mask is not None:
+        gain = jnp.where(member_mask, gain, 0.0)
     return state._replace(
         battery_j=clamp_battery(state.battery_j + gain, capacity_j))
 

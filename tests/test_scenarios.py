@@ -1,0 +1,386 @@
+"""Degraded-ops scenario engine: eclipse windows (host-vs-device
+parity, battery-clamp edge cases), Byzantine satellites vs robust
+aggregation (the acceptance criterion: trimmed-mean recovers, plain
+mean diverges), epidemic fault propagation (host-prefix bit parity,
+in-scan refresh beyond the precomputed horizon), multi-leave events and
+collision-free failure streams."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.constellation import ConstellationConfig, ConstellationSim
+from repro.core.energy import PassBudget, solar_recharge_j
+from repro.core.orbits import OrbitalPlane
+from repro.core.sl_step import autoencoder_adapter
+from repro.fleet import (FleetConfig, FleetEngine, build_event_schedule,
+                         oracle_actions)
+from repro.fleet.scenarios import (ByzantineConfig, EclipseConfig,
+                                   EpidemicConfig, ScenarioConfig,
+                                   aggregate_planes,
+                                   build_scenario_schedule,
+                                   epidemic_oracle)
+from repro.sim.data import DeviceImageryShards
+from repro.sim.device_sim import (ACTION_FAILED, ACTION_FAULT,
+                                  ACTION_SKIPPED, ACTION_TRAINED)
+
+SHARDS = DeviceImageryShards(img=32, batch=4)
+ADAPTER = autoencoder_adapter(cut=5, img=32)
+
+
+def _budget(n_sats=4, n_items=4e6):
+    return PassBudget(plane=OrbitalPlane(n_sats=n_sats), n_items=n_items)
+
+
+def _fleet(budget, **cfg_kw):
+    return FleetEngine(ADAPTER, budget, SHARDS,
+                       FleetConfig(**cfg_kw))
+
+
+# ----------------------------------------------------- scenario configs
+
+def test_eclipse_config_windows():
+    """The shadow sits at the start of each cycle, staggered per plane,
+    and the same modular arithmetic serves ints and traced scalars."""
+    ec = EclipseConfig(period=4, duty=0.5, stagger=1)
+    assert [bool(ec.sunlit(k)) for k in range(6)] == \
+        [False, False, True, True, False, False]
+    # stagger shifts plane 1's shadow one pass earlier
+    assert [bool(ec.sunlit(k, 1)) for k in range(4)] == \
+        [False, True, True, False]
+    assert all(EclipseConfig(period=3, duty=0.0).sunlit(k)
+               for k in range(9))
+    assert not any(EclipseConfig(period=3, duty=1.0).sunlit(k)
+                   for k in range(9))
+    assert bool(jax.jit(lambda k: ec.sunlit(k))(2))
+    with pytest.raises(ValueError, match="duty"):
+        EclipseConfig(period=4, duty=1.5)
+    with pytest.raises(ValueError, match="period"):
+        EclipseConfig(period=0, duty=0.5)
+    # the host-side gate: eclipse harvests a literal 0 J
+    assert solar_recharge_j(20.0, 100.0, sunlit=False) == 0.0
+    assert solar_recharge_j(20.0, 100.0, sunlit=True) == 2000.0
+
+
+def test_aggregate_planes_modes():
+    """Coordinate-wise centers over the plane axis, broadcast back;
+    integer leaves stay per-plane; bad modes/plane counts raise."""
+    tree = {"w": jnp.asarray([[1., 2.], [3., 4.], [100., -100.], [5., 6.]]),
+            "step": jnp.asarray([1, 2, 3, 4])}
+    mean = aggregate_planes(tree, "mean")
+    np.testing.assert_allclose(np.asarray(mean["w"]),
+                               np.full((4, 2), [27.25, -22.0]))
+    # median/trimmed_mean shrug off the (100, -100) outlier plane
+    med = aggregate_planes(tree, "median")
+    trim = aggregate_planes(tree, "trimmed_mean")
+    np.testing.assert_allclose(np.asarray(med["w"][0]), [4.0, 3.0])
+    np.testing.assert_allclose(np.asarray(trim["w"][0]), [4.0, 3.0])
+    for out in (mean, med, trim):
+        assert out["w"].shape == (4, 2)
+        np.testing.assert_array_equal(np.asarray(out["step"]),
+                                      [1, 2, 3, 4])
+    with pytest.raises(ValueError, match="mode"):
+        aggregate_planes(tree, "geometric")
+    with pytest.raises(ValueError, match="planes"):
+        aggregate_planes({"w": jnp.zeros((2, 3))}, "trimmed_mean")
+
+
+def test_byzantine_mask_and_modes():
+    bz = ByzantineConfig(planes=(3,), slots={0: [1, 2], 1: 0})
+    mask = bz.mask(4, 4)
+    assert mask[3].all() and mask[0, 1] and mask[0, 2] and mask[1, 0]
+    assert mask.sum() == 7
+    with pytest.raises(ValueError, match="mode"):
+        ByzantineConfig(mode="bitrot")
+
+
+def test_epidemic_oracle_spread_and_recovery():
+    """beta=1: the fault front advances one ring slot per pass in both
+    directions (recovered slots are immediately susceptible again, so
+    the ring saturates); beta=0: seeds fault for exactly ttl passes."""
+    scn = ScenarioConfig(epidemic=EpidemicConfig(
+        beta=1.0, ttl=2, init_slots=(0,), start=0))
+    sched = build_scenario_schedule(scn, 1, 6, 8, seed=0)
+    inf = epidemic_oracle(scn, sched)
+    expect = np.zeros((8, 6), bool)
+    expect[0, [0]] = True                       # seeded
+    expect[1, [0, 1, 5]] = True                 # spread to ring neighbors
+    expect[2, [0, 1, 2, 4, 5]] = True           # 0 recovers, is reinfected
+    expect[3:] = True                           # fronts meet: saturated
+    np.testing.assert_array_equal(inf[0], expect)
+    # beta=0: only the seeds fault, for exactly ttl passes
+    scn0 = ScenarioConfig(epidemic=EpidemicConfig(
+        beta=0.0, ttl=3, init_slots=(2,), start=1))
+    inf0 = epidemic_oracle(scn0, build_scenario_schedule(scn0, 1, 4, 8))
+    assert inf0.sum() == 3 and inf0[0, 1:4, 2].all()
+
+
+# ------------------------------------------- the acceptance criterion
+
+def test_trimmed_mean_recovers_byzantine_plane():
+    """ISSUE 6 acceptance: with 1 of 4 planes Byzantine (sign-flipped,
+    scaled), trimmed-mean aggregation recovers the honest planes' final
+    loss to within 10% of the fault-free run while plain mean diverges;
+    scenario runs keep the ≤-1-sync-per-revolution contract."""
+    budget = _budget(n_sats=4)
+    byz = ScenarioConfig(byzantine=ByzantineConfig(
+        planes=(3,), mode="sign_flip", scale=8.0))
+
+    def run(scenario, aggregate):
+        fleet = _fleet(budget, n_planes=4, n_revolutions=6,
+                       max_steps_per_pass=4, seed=0, avg_every=1,
+                       scenario=scenario, aggregate=aggregate)
+        res = fleet.run(stream_telemetry=True)
+        assert fleet.traces == 1
+        assert fleet.host_syncs == 6          # one per revolution
+        # final loss over the HONEST planes (0..2)
+        last = [row[np.isfinite(row)][-1] for row in res.loss[:3]]
+        return float(np.mean(last))
+
+    clean = run(None, "mean")
+    poisoned = run(byz, "mean")
+    recovered = run(byz, "trimmed_mean")
+    assert np.isfinite(clean) and clean > 0
+    # plain mean lets the corrupted plane poison the exchange
+    assert poisoned > 10.0 * clean, (poisoned, clean)
+    # trimmed-mean drops the outlier coordinate-wise and recovers
+    assert abs(recovered - clean) <= 0.10 * clean, (recovered, clean)
+
+
+def test_median_aggregation_also_recovers():
+    """The median mode survives the same corrupted plane (smaller run:
+    scaled-noise corruption instead of sign flips)."""
+    budget = _budget(n_sats=4)
+    byz = ScenarioConfig(byzantine=ByzantineConfig(
+        planes=(3,), mode="scaled_noise", scale=5.0))
+    losses = {}
+    for scn, agg in ((None, "mean"), (byz, "median")):
+        fleet = _fleet(budget, n_planes=4, n_revolutions=4,
+                       max_steps_per_pass=4, seed=0, avg_every=1,
+                       scenario=scn, aggregate=agg)
+        res = fleet.run()
+        last = [row[np.isfinite(row)][-1] for row in res.loss[:3]]
+        losses[agg] = float(np.mean(last))
+    assert abs(losses["median"] - losses["mean"]) <= \
+        0.10 * losses["mean"], losses
+
+
+# ------------------------------------------------ eclipse: host parity
+
+ECLIPSE = EclipseConfig(period=4, duty=0.5)
+TIGHT = dict(battery_j=200.0, recharge_w=0.02, reserve_j=180.0,
+             max_steps_per_pass=2)
+
+
+def test_eclipse_host_device_parity():
+    """A host run with eclipse-gated recharge delegates to the fleet
+    scenario engine and reproduces the action sequence and battery
+    trajectory exactly; the eclipse observably deepens the skip count
+    vs the permanently-sunlit run."""
+    budget = _budget()
+
+    def mk(eclipse):
+        return ConstellationSim(
+            ADAPTER, budget, SHARDS,
+            ConstellationConfig(batch_size=4, n_passes=12,
+                                eclipse=eclipse, **TIGHT))
+
+    host, dev = mk(ECLIPSE), mk(ECLIPSE)
+    host.run()
+    dev.run(engine="device")
+    assert [(r.action, r.sat_id) for r in host.records] == \
+        [(r.action, r.sat_id) for r in dev.records]
+    for h, d in zip(host.records, dev.records):
+        np.testing.assert_allclose(d.battery_j, h.battery_j, rtol=1e-5,
+                                   atol=0.05)
+    skips = host.summary()["skipped"]
+    assert skips > 0
+    sunny = mk(None)
+    sunny.run()
+    assert sunny.summary()["skipped"] < skips
+    # eclipse is a fleet-scenario feature: the static engine refuses it
+    with pytest.raises(ValueError, match="eclipse"):
+        mk(ECLIPSE).as_device_sim()
+
+
+def test_battery_clamp_zero_capacity():
+    """Zero-capacity satellites: every pass reserve-skips, batteries
+    pin at exactly 0 J (never negative), no div-by-zero anywhere."""
+    budget = _budget()
+    fleet = _fleet(budget, n_planes=2, n_revolutions=2, battery_j=0.0,
+                   recharge_w=5.0, reserve_j=10.0, max_steps_per_pass=2,
+                   seed=0,
+                   scenario=ScenarioConfig(eclipse=ECLIPSE))
+    np.testing.assert_array_equal(oracle_actions(fleet),
+                                  np.full((2, 8), ACTION_SKIPPED))
+    res = fleet.run()
+    assert (res.action == ACTION_SKIPPED).all()
+    assert (res.battery_j == 0.0).all()
+    assert (np.asarray(res.energy.battery_j) == 0.0).all()
+    assert np.isfinite(np.asarray(res.energy.energy_spent_j)).all()
+    assert (res.n_steps == 0).all()
+
+
+def test_battery_clamp_full_revolution_eclipse():
+    """duty=1.0 gates recharge to exactly 0 J across the whole run:
+    batteries only ever drain, monotonically, the reserve-skip policy
+    fires on every pass once depleted, and nothing goes negative —
+    bit-identically on host and device."""
+    budget = _budget()
+    dark = EclipseConfig(period=4, duty=1.0)
+
+    host = ConstellationSim(
+        ADAPTER, budget, SHARDS,
+        ConstellationConfig(batch_size=4, n_passes=16, eclipse=dark,
+                            battery_j=60.0, recharge_w=5.0,
+                            reserve_j=50.0, max_steps_per_pass=2))
+    dev = ConstellationSim(
+        ADAPTER, budget, SHARDS,
+        ConstellationConfig(batch_size=4, n_passes=16, eclipse=dark,
+                            battery_j=60.0, recharge_w=5.0,
+                            reserve_j=50.0, max_steps_per_pass=2))
+    host.run()
+    dev.run(engine="device")
+    assert [r.action for r in host.records] == \
+        [r.action for r in dev.records]
+    for h, d in zip(host.records, dev.records):
+        np.testing.assert_allclose(d.battery_j, h.battery_j, rtol=1e-5,
+                                   atol=0.05)
+    # each sat trains once (draining below reserve), then every later
+    # pass skips: recharge contributed exactly 0 J
+    acts = [r.action for r in host.records]
+    assert acts[:4] == ["trained"] * 4 and \
+        acts[4:] == ["skipped_energy"] * 12
+    batteries = np.asarray([s.battery_j for s in host.sats])
+    assert (batteries >= 0.0).all() and (batteries < 50.0).all()
+    # per-sat battery telemetry never increases under a 100% eclipse
+    for s in range(4):
+        traj = [r.battery_j for r in host.records if r.sat_id == s]
+        assert all(b1 <= b0 + 1e-6 for b0, b1 in zip(traj, traj[1:]))
+
+
+def test_reserve_skip_every_pass():
+    """Batteries that start below the reserve skip every pass yet stay
+    clamped at their initial charge (recharge off, nothing drains)."""
+    budget = _budget()
+    fleet = _fleet(budget, n_planes=1, n_revolutions=3, battery_j=100.0,
+                   recharge_w=0.0, reserve_j=150.0,
+                   max_steps_per_pass=2, seed=0)
+    res = fleet.run()
+    assert (res.action == ACTION_SKIPPED).all()
+    np.testing.assert_allclose(res.battery_j, 100.0)
+    assert (np.asarray(res.energy.passes_skipped).sum()
+            == res.action.size)
+
+
+# --------------------------------- epidemic: prefix parity + beyond
+
+def test_epidemic_prefix_parity_and_beyond_horizon():
+    """Device actions equal the NumPy host-prefix oracle bit for bit
+    over the precomputed horizon; chained revolutions beyond it keep
+    drawing epidemic spreads AND failures from jax.random inside the
+    scan (ROADMAP item 4's in-scan refresh)."""
+    budget = _budget(n_sats=6)
+    scn = ScenarioConfig(epidemic=EpidemicConfig(
+        beta=0.5, ttl=4, init_slots=(0, 3), start=0))
+    fleet = _fleet(budget, n_planes=2, n_revolutions=2,
+                   max_steps_per_pass=2, seed=3, fail_prob=0.1,
+                   avg_every=0, scenario=scn)
+    expect = oracle_actions(fleet)
+    res = fleet.run(stream_telemetry=True)
+    np.testing.assert_array_equal(res.action, expect)
+    assert (res.action == ACTION_FAULT).sum() > 0
+    assert res.summary()["faulted"] == (res.action == ACTION_FAULT).sum()
+    # telemetry counts every faulted slot, serving or not
+    assert (res.n_infected >= (res.action == ACTION_FAULT)).all()
+    assert res.n_infected.max() > 1
+
+    # beyond the precomputed horizon: same compiled program, and the
+    # degraded-ops streams stay active (neither faults nor failures
+    # freeze at the horizon)
+    res2 = fleet.run(4, stream_telemetry=True)
+    assert fleet.traces == 1          # R=1 streaming program reused
+    beyond = res2.action
+    assert (beyond == ACTION_FAULT).sum() > 0, "epidemic froze"
+    assert (beyond == ACTION_FAILED).sum() > 0, "failure stream froze"
+    assert int(np.asarray(fleet._pass_idx)) == 36
+
+
+def test_epidemic_faulted_slot_pays_no_energy():
+    """A faulted pass is a masked no-op: no drain, no steps, no loss,
+    and the slot returns to training once its ttl expires."""
+    budget = _budget()
+    scn = ScenarioConfig(epidemic=EpidemicConfig(
+        beta=0.0, ttl=2, init_slots=(1,), start=1))
+    fleet = _fleet(budget, n_planes=1, n_revolutions=3,
+                   max_steps_per_pass=2, seed=0, scenario=scn)
+    res = fleet.run()
+    # slot 1 serves passes 1, 5, 9; infected at passes 1-2 only
+    assert res.action[0, 1] == ACTION_FAULT
+    assert res.n_steps[0, 1] == 0 and not np.isfinite(res.loss[0, 1])
+    assert res.action[0, 5] == ACTION_TRAINED
+    assert res.action[0, 9] == ACTION_TRAINED
+    assert np.asarray(res.energy.passes_served)[0, 1] == 2
+    assert (res.fault_ttl == 0).all()
+
+
+# ------------------------------------- events: multi-leave + streams
+
+def test_multi_leave_events():
+    """``leave_events`` accepts a sequence of ids per pass; host and
+    schedule resolve the same slots; host-vs-device parity holds."""
+    sched = build_event_schedule(4, 8, leave_events={3: [0, 2], 5: 1})
+    assert list(sched.leave_pass) == [3, 5, 3,
+                                      np.iinfo(np.int32).max]
+    assert list(sched.member_at(6)) == [False, False, False, True]
+
+    budget = _budget()
+
+    def mk():
+        return ConstellationSim(
+            ADAPTER, budget, SHARDS,
+            ConstellationConfig(batch_size=4, n_passes=8,
+                                leave_events={3: (0, 2)},
+                                max_steps_per_pass=2))
+
+    host, dev = mk(), mk()
+    host.run()
+    dev.run(engine="device")
+    assert [(r.action, r.sat_id) for r in host.records] == \
+        [(r.action, r.sat_id) for r in dev.records]
+    # after pass 3 only sats 1 and 3 remain in the rotation
+    assert {r.sat_id for r in host.records[3:]} == {1, 3}
+
+
+def test_spawned_streams_fix_seed_collisions():
+    """``default_rng(seed + p)`` collides: (seed=0, plane=1) equals
+    (seed=1, plane=0).  SeedSequence-spawned streams do not, and stay
+    deterministic; the legacy path still matches the host oracle."""
+    legacy0 = build_event_schedule(4, 64, fail_prob=0.5, n_planes=2,
+                                   seed=0)
+    legacy1 = build_event_schedule(4, 64, fail_prob=0.5, n_planes=2,
+                                   seed=1)
+    assert (legacy0.fail_mask[1] == legacy1.fail_mask[0]).all()
+
+    spawn0 = build_event_schedule(4, 64, fail_prob=0.5, n_planes=2,
+                                  seed=0, legacy_streams=False)
+    spawn1 = build_event_schedule(4, 64, fail_prob=0.5, n_planes=2,
+                                  seed=1, legacy_streams=False)
+    assert not (spawn0.fail_mask[1] == spawn1.fail_mask[0]).all()
+    assert not (spawn0.fail_mask[0] == spawn0.fail_mask[1]).all()
+    again = build_event_schedule(4, 64, fail_prob=0.5, n_planes=2,
+                                 seed=0, legacy_streams=False)
+    np.testing.assert_array_equal(spawn0.fail_mask, again.fail_mask)
+    # legacy stays the default (host-parity tests depend on it) and the
+    # fleet threads the flag through to its schedule
+    assert legacy0.legacy_streams and not spawn0.legacy_streams
+    fleet = _fleet(_budget(), n_planes=2, n_revolutions=1,
+                   max_steps_per_pass=2, seed=0, fail_prob=0.5,
+                   legacy_streams=False)
+    assert not fleet.schedule.legacy_streams
+    np.testing.assert_array_equal(fleet.schedule.fail_mask[:, :4],
+                                  spawn0.fail_mask[:, :4])
+    # the oracle replays spawned streams just as exactly (it reads the
+    # initial state, so compute it before running)
+    expect = oracle_actions(fleet)
+    np.testing.assert_array_equal(fleet.run().action, expect)
