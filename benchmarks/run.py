@@ -587,6 +587,120 @@ def degraded_ops_benchmarks(quick: bool = False):
     return out
 
 
+def serve_fleet_benchmarks(quick: bool = False):
+    """Serving-fleet rows (``repro.serve_fleet``): the constellation as
+    an inference fleet.
+
+    * ``serve_split_decode`` — one satellite's sustained generated
+      tokens/sec, measured wall-clock on the real split-model
+      continuous-batching engine (ground-half bulk prefill, satellite
+      half + boundary downlink + ground half per decode step).
+    * ``serve_fleet_PxM`` — constellation-scale pass-window serving at
+      >= 1M offered users/day: Poisson arrivals with a diurnal profile,
+      routed to the satellite overhead, FIFO backlog carry-over along
+      the ring.  Reports sustained tokens/sec and FIFO p99 latency;
+      the NumPy host oracle asserts bit-exact f32 energy parity per
+      row.  Capacity scales with the number of planes (one terminal
+      serves one overhead satellite at a time — the paper's geometry),
+      so 1x64 vs 4x256 is the constellation-size comparison.
+    * ``serve_fleet_contention`` — the same offered load with a
+      concurrent planned training pass per window on ONE shared
+      battery: trained-pass count with vs without serving drain (the
+      reserve-skip gate reads the post-serve battery).  Uses a fixed
+      ServeCost so the row is measurement-noise-free for the trend
+      report.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import configs
+    from repro.models import lm
+    from repro.serve_fleet import (FleetServeEngine, ServeCost,
+                                   ServeFleetConfig, SplitDecodeEngine,
+                                   TrafficConfig, TrainLoad,
+                                   assert_host_parity,
+                                   measure_decode_rate, serve_cost)
+
+    print("== serve-fleet benchmarks (constellation as an inference "
+          "fleet) ==")
+    print("name,us_per_call,derived")
+    out = {}
+
+    # -- per-satellite split-decode rate (real engine, wall-clock) --------
+    cfg = configs.get_smoke("smollm_360m")
+    params = lm.init(cfg, jax.random.key(0))
+    cut = max(1, cfg.n_units // 2)
+    eng = SplitDecodeEngine(cfg, params, cut_units=cut, n_slots=8,
+                            s_max=64, act_dtype=jnp.float32)
+    rate = measure_decode_rate(eng, n_requests=8 if quick else 48,
+                               prompt_len=6, new_tokens=12)
+    cost = serve_cost(cfg, params, cut, tokens_per_s=rate)
+    out["serve_split_decode"] = dict(
+        arch=cfg.name, cut_units=cut, n_slots=8, tokens_per_s=rate,
+        e_token_j=cost.e_token_j, dtx_bits_token=cost.dtx_bits_token)
+    print(f"serve_split_decode,,{rate:.1f}tok/s,"
+          f"e_token={cost.e_token_j:.2e}J")
+
+    # -- constellation-size rows at >= 1M users/day -----------------------
+    # offered load = 2x ONE satellite's measured capacity (>= 1.5M
+    # users/day): a single plane saturates (one sat overhead at a time),
+    # four planes = four terminals serve the same load comfortably —
+    # capacity scales with planes, and the p99 gap shows it
+    decode_len = 12
+    users = max(1.5e6, 2.0 * rate * 86_400.0 / decode_len)
+    traffic = TrafficConfig(users_per_day=users, prompt_len=6,
+                            decode_len=decode_len)
+    scenarios = [(1, 8, 16)] if quick else [(1, 64, 192), (4, 256, 192)]
+    for P, M, K in scenarios:
+        scfg = ServeFleetConfig(n_planes=P, n_sats=M, n_windows=K,
+                                battery_j=5000.0, recharge_w=25.0,
+                                reserve_serve_j=100.0)
+        fleet = FleetServeEngine(scfg, traffic, cost)
+        us, res = _timeit(fleet.run, n=1, warmup=0)
+        assert_host_parity(res, None)            # f32 energy parity
+        s = res.summary()
+        name = f"serve_fleet_{P}x{M}"
+        out[name] = dict(us=us, host_syncs=fleet.host_syncs,
+                         energy_parity=True, **s)
+        print(f"{name},{us:.0f},"
+              f"{s['sustained_tokens_per_s']:.0f}tok/s,"
+              f"p99={s['p99_latency_s']:.0f}s,"
+              f"backlog={s['final_backlog_requests']:.0f}")
+
+    # -- train-vs-serve contention on one battery -------------------------
+    M, K = (8, 32) if quick else (16, 192)
+    fixed = ServeCost(tokens_per_s=2000.0, e_token_j=5e-3,
+                      dtx_bits_token=cost.dtx_bits_token)
+    scfg = ServeFleetConfig(n_planes=1, n_sats=M, n_windows=K,
+                            battery_j=1000.0, recharge_w=0.15,
+                            reserve_serve_j=50.0, reserve_train_j=600.0)
+    train = TrainLoad(drain_j=500.0, e_total_j=700.0)
+
+    def contention(users):
+        fleet = FleetServeEngine(
+            scfg, dataclasses.replace(traffic, users_per_day=users),
+            fixed, train=train)
+        res = fleet.run()
+        assert_host_parity(res, train)
+        return res.summary()
+
+    us, s_with = _timeit(lambda: contention(1.5e6), n=1, warmup=0)
+    _, s_without = _timeit(lambda: contention(0.0), n=1, warmup=0)
+    assert s_with["trained_passes"] < s_without["trained_passes"], (
+        "serving drain must cost trained passes", s_with, s_without)
+    out["serve_fleet_contention"] = dict(
+        us=us, n_windows=K, n_sats=M,
+        trained_with_serve=s_with["trained_passes"],
+        skipped_with_serve=s_with["skipped_passes"],
+        trained_without_serve=s_without["trained_passes"],
+        skipped_without_serve=s_without["skipped_passes"],
+        serve_energy_spent_j=s_with["serve_energy_spent_j"])
+    print(f"serve_fleet_contention,{us:.0f},"
+          f"trained {s_with['trained_passes']} (serving) vs "
+          f"{s_without['trained_passes']} (idle) of {K}")
+    return out
+
+
 def micro_benchmarks():
     """us/call for the SL step + each kernel's jnp path (CPU; the numbers
     are for regression tracking, not TPU performance claims)."""
@@ -761,6 +875,7 @@ def main(argv=None) -> None:
     section("device_sim", device_sim_benchmarks, quick=args.quick)
     section("fleet", fleet_benchmarks, quick=args.quick)
     section("degraded_ops", degraded_ops_benchmarks, quick=args.quick)
+    section("serve_fleet", serve_fleet_benchmarks, quick=args.quick)
     section("micro", micro_benchmarks)
     errored = sorted(k for k, v in results.items()
                      if isinstance(v, dict) and v.get("status") == "error")

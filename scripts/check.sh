@@ -32,6 +32,12 @@ else
     # parity, <= 1 host sync per revolution
     echo "== degraded-ops smoke (eclipse + byzantine + epidemic) =="
     python -m repro.fleet --scenario degraded
+    # serve-fleet smoke: split-vs-full greedy decode parity, a few
+    # hundred requests through real pass-window routing on the split
+    # engine, and the fleet serving scan vs its NumPy oracle (f32
+    # energy parity on the shared train/serve batteries)
+    echo "== serve-fleet smoke (split decode + pass-window serving) =="
+    python -m repro.serve_fleet
 fi
 
 echo "== quick benchmark smoke (solver backends + sweep + closed loop) =="

@@ -27,11 +27,26 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--s-max", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill", choices=("bulk", "loop"), default="bulk",
+                    help="prompt ingestion: one prefill forward + cache "
+                    "splice (bulk) or the legacy token-by-token loop")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route decode attention through the Pallas "
+                    "flash-decode kernel")
+    ap.add_argument("--cut", type=int, default=None,
+                    help="serve the SPLIT model cut at this unit boundary "
+                    "(satellite half + boundary downlink + ground half)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch)
     params = lm.init(cfg, jax.random.key(args.seed))
-    engine = DecodeEngine(cfg, params, n_slots=args.slots, s_max=args.s_max)
+    kw = dict(n_slots=args.slots, s_max=args.s_max, prefill=args.prefill,
+              use_pallas=args.use_pallas)
+    if args.cut is None:
+        engine = DecodeEngine(cfg, params, **kw)
+    else:
+        from repro.serve_fleet.engine import SplitDecodeEngine
+        engine = SplitDecodeEngine(cfg, params, cut_units=args.cut, **kw)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
@@ -45,8 +60,13 @@ def main(argv=None):
     total = sum(len(v) for v in out.values())
     for rid in sorted(out):
         print(f"req {rid}: {out[rid]}")
+    mode = f"{args.prefill} prefill"
+    if args.use_pallas:
+        mode += ", pallas decode"
+    if args.cut is not None:
+        mode += f", split at unit {args.cut}"
     print(f"served {len(out)} requests, {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s, {args.slots} slots)")
+          f"({total/dt:.1f} tok/s, {args.slots} slots, {mode})")
     return out
 
 

@@ -393,6 +393,83 @@ def decode_step(cfg, params, cache, tokens, positions, *, ctx: L.Ctx,
 
 
 # --------------------------------------------------------------------------
+# Split serving: decode with the model cut at a unit boundary.
+# --------------------------------------------------------------------------
+
+def split_serve_params(cfg, params, cut_units: int):
+    """Split the decode-path params at unit boundary ``cut_units``.
+
+    Returns ``(params_sat, params_gnd)``: the satellite half holds the
+    embedding and units ``[0, cut)``; the ground half holds units
+    ``[cut, U)``, the final norm and the head (for tied embeddings the
+    ground station keeps its own copy of the embedding matrix — the
+    paper's segment-B weights).  Zamba2's shared attention block is
+    replicated to both halves (it is applied inside units on each side).
+    """
+    if not 1 <= cut_units <= cfg.n_units - 1:
+        raise ValueError(f"cut_units must be in [1, {cfg.n_units - 1}], "
+                         f"got {cut_units}")
+    if cfg.enc_dec:
+        raise NotImplementedError("split serving does not cover enc-dec "
+                                  "(whisper) architectures")
+    pa = {"embed": params["embed"],
+          "units": jax.tree.map(lambda a: a[:cut_units], params["units"])}
+    pb = {"units": jax.tree.map(lambda a: a[cut_units:], params["units"]),
+          "final_norm": params["final_norm"]}
+    if cfg.tie_embeddings:
+        pb["embed"] = params["embed"]
+    else:
+        pb["head"] = params["head"]
+    if "shared" in params:
+        pa["shared"] = params["shared"]
+        pb["shared"] = params["shared"]
+    return pa, pb
+
+
+def decode_step_split(cfg, params_sat, params_gnd, cache, tokens, positions,
+                      *, ctx: L.Ctx, unroll: int = 1):
+    """One decode step of the SPLIT model (satellite half then ground
+    half), numerically identical to :func:`decode_step` on the unsplit
+    params: ``lax.scan`` over units is sequential, so running two scans
+    over the two halves applies the same blocks in the same order.
+
+    ``cache`` is the full stacked decode cache; its leading unit axis is
+    sliced per half and the updated halves are re-concatenated.
+
+    Returns ``(logits (B, 1, V) fp32, new_cache, boundary)`` where
+    ``boundary`` is the smashed activation ``(B, 1, d_model)`` that
+    crosses the satellite->ground downlink — its size is the per-token
+    D_tx payload the serving energy model charges.
+    """
+    cut = jax.tree.leaves(params_sat["units"])[0].shape[0]
+    B = tokens.shape[0]
+    x = _embed_tokens(cfg, params_sat, tokens, ctx.act_dtype)
+    ctx = dataclasses.replace(
+        ctx, mode="decode", positions=positions,
+        rope=_rope_for(cfg, B, 1, positions=positions))
+
+    def unit_fn(shared):
+        def f(h, inp):
+            up, uc = inp
+            h, new_c, _ = _apply_unit(cfg, up, shared, h, ctx, uc)
+            return h, new_c
+        return f
+
+    cache_a = jax.tree.map(lambda a: a[:cut], cache)
+    cache_b = jax.tree.map(lambda a: a[cut:], cache)
+    boundary, new_a = jax.lax.scan(
+        unit_fn(params_sat.get("shared")), x,
+        (params_sat["units"], cache_a), unroll=unroll)
+    x, new_b = jax.lax.scan(
+        unit_fn(params_gnd.get("shared")), boundary,
+        (params_gnd["units"], cache_b), unroll=unroll)
+    x = L.rmsnorm(params_gnd["final_norm"], x, cfg.norm_eps)
+    new_cache = jax.tree.map(
+        lambda a, b: jnp.concatenate([a, b], axis=0), new_a, new_b)
+    return _head(cfg, params_gnd, x), new_cache, boundary
+
+
+# --------------------------------------------------------------------------
 # Split-learning segment execution (the paper's cut, on a real model).
 # --------------------------------------------------------------------------
 

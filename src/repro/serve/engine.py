@@ -3,8 +3,22 @@ LM's KV cache (full / sliding-window / SSM-state, per architecture).
 
 Slots hold independent requests; finished slots are refilled from the
 queue without stopping the batch (continuous batching a la Orca/vLLM,
-adapted to the static-shape jit step). Prefill runs per-request via
-``forward`` in prefill mode and its cache is spliced into the slot.
+adapted to the static-shape jit step).
+
+Prefill is BULK by default: the prompt runs through ``forward`` in
+prefill mode (one call, full sequence), its cache is converted with
+``cache_from_prefill`` and spliced into the slot's batch row — the
+other live slots' caches are untouched.  The legacy token-by-token
+loop (``prefill="loop"``) is kept only as a parity reference: it ran
+one full-batch jitted step per prompt token AND wrote a zero-token
+entry into every *other* live slot's cache position, which is merely
+wasteful for attention rings (the garbage row is overwritten at that
+slot's next real write) but corrupts recurrent state (mamba / xLSTM)
+for any concurrently-live slot.
+
+Decode attention can be routed through the Pallas flash-decode kernel
+(``kernels/decode_attn.py``) with ``use_pallas=True``; the default is
+the reference jnp path (``Ctx.use_pallas=False``).
 """
 from __future__ import annotations
 
@@ -31,35 +45,79 @@ class DecodeEngine:
     """Greedy decoding over ``n_slots`` concurrent requests."""
 
     def __init__(self, cfg, params, *, n_slots: int = 4, s_max: int = 512,
-                 act_dtype=jnp.bfloat16):
+                 act_dtype=jnp.bfloat16, use_pallas: bool = False,
+                 prefill: str = "bulk"):
+        if prefill not in ("bulk", "loop"):
+            raise ValueError(f"prefill must be 'bulk' or 'loop', "
+                             f"got {prefill!r}")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.s_max = s_max
-        self.ctx = Ctx(cfg=cfg, mode="decode", act_dtype=act_dtype)
+        self.act_dtype = act_dtype
+        self.prefill_mode = prefill
+        self.ctx = Ctx(cfg=cfg, mode="decode", act_dtype=act_dtype,
+                       use_pallas=use_pallas)
         self.cache = lm.init_cache(cfg, n_slots, s_max, act_dtype)
         self.positions = np.zeros((n_slots,), np.int32)
         self.budget = np.zeros((n_slots,), np.int32)
         self.last_tok = np.zeros((n_slots,), np.int32)
         self.live: List[Optional[Request]] = [None] * n_slots
+        self._step = jax.jit(self._step_fn, donate_argnums=(1,))
+        # jit caches one executable per distinct prompt length
+        self._prefill = jax.jit(self._prefill_fn)
 
-        def step(params, cache, tokens, positions):
-            logits, cache = lm.decode_step(cfg, params, cache, tokens,
-                                           positions, ctx=self.ctx)
-            return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
-                cache
-        self._step = jax.jit(step, donate_argnums=(1,))
+    # ---------------------------------------------------------------- jitted
+    def _decode_fn(self, params, cache, tokens, positions):
+        """One batched decode step -> (logits (B,1,V), cache). Subclasses
+        (the split-serving engine) override this to change the model
+        path while keeping all slot mechanics."""
+        return lm.decode_step(self.cfg, params, cache, tokens,
+                              positions, ctx=self.ctx)
+
+    def _step_fn(self, params, cache, tokens, positions):
+        logits, cache = self._decode_fn(params, cache, tokens, positions)
+        return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), cache
+
+    def _prefill_fn(self, params, tokens):
+        """Bulk prefill of one prompt (1, S) -> (next_token, decode cache
+        of batch 1)."""
+        pctx = dataclasses.replace(self.ctx, mode="prefill")
+        logits, _, caches = lm.forward(self.cfg, params, tokens, ctx=pctx,
+                                       remat="none")
+        cache1 = lm.cache_from_prefill(self.cfg, caches, self.s_max,
+                                       self.act_dtype)
+        return jnp.argmax(logits[0, -1]).astype(jnp.int32), cache1
 
     # ---------------------------------------------------------------- slots
     def _prefill_into_slot(self, slot: int, req: Request):
-        """Run the prompt through decode steps to build the slot cache.
-
-        (Token-by-token prefill keeps the engine single-program; the
-        prefill_step path exists for bulk prefill benchmarking.)
-        """
         req.out_tokens = []
         self.live[slot] = req
         self.budget[slot] = req.max_new_tokens
+        if self.prefill_mode == "loop":
+            self._prefill_into_slot_loop(slot, req)
+            return
+        nxt, cache1 = self._prefill(self.params,
+                                    jnp.asarray(req.prompt)[None, :])
+        # splice the single-request cache into this slot's batch row;
+        # every cache leaf is (n_units, batch, ...)
+        self.cache = jax.tree.map(
+            lambda full, one: full.at[:, slot].set(
+                one[:, 0].astype(full.dtype)),
+            self.cache, cache1)
+        self.positions[slot] = len(req.prompt)
+        self.last_tok[slot] = int(nxt)
+
+    def _prefill_into_slot_loop(self, slot: int, req: Request):
+        """Legacy token-by-token prefill — parity reference ONLY.
+
+        Runs one full-batch decode step per prompt token; each step also
+        pushes a zero token through every other live slot, which writes
+        garbage into their attention ring rows (harmless: overwritten at
+        that position's next real write) and advances their recurrent
+        states (NOT harmless — do not use with concurrently-live slots
+        on mamba/mlstm/slstm architectures).
+        """
         pos = 0
         for t in req.prompt:
             toks = np.zeros((self.n_slots, 1), np.int32)
@@ -73,10 +131,28 @@ class DecodeEngine:
         self.positions[slot] = pos
         self.last_tok[slot] = int(np.asarray(nxt)[slot])
 
+    # ------------------------------------------------------------------ run
     def submit_and_run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Serve all requests to completion; returns rid -> generated ids."""
-        queue = list(requests)
+        """Serve all requests to completion; returns rid -> generated ids.
+
+        Requests are served FIFO (slot refill order = submission order).
+        ``max_new_tokens <= 0`` completes immediately with ``[]``; a
+        prompt of length >= ``s_max`` cannot fit the cache alongside a
+        generated token and raises ``ValueError`` up front.
+        """
         done: Dict[int, List[int]] = {}
+        queue: List[Request] = []
+        for req in requests:
+            if len(req.prompt) >= self.s_max:
+                raise ValueError(
+                    f"request {req.rid}: prompt length {len(req.prompt)} "
+                    f">= s_max={self.s_max} (no cache room to decode)")
+            if req.max_new_tokens <= 0:
+                req.out_tokens = []
+                done[req.rid] = req.out_tokens
+            else:
+                queue.append(req)
+
         for slot in range(self.n_slots):
             if queue:
                 self._prefill_into_slot(slot, queue.pop(0))

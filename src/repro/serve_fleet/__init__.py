@@ -1,0 +1,36 @@
+"""The constellation as an inference fleet: pass-window-routed
+continuous-batching serving of the split model, on the same batteries
+training drains.
+
+``python -m repro.serve_fleet`` runs the smoke: split-vs-full decode
+parity, a few hundred synthetic requests routed through pass windows on
+a small ring, and the host-vs-device f32 energy-parity assertion.
+"""
+from repro.serve_fleet.engine import (
+    FleetServeEngine,
+    ServeCost,
+    ServeFleetConfig,
+    ServeFleetResult,
+    SplitDecodeEngine,
+    TrainLoad,
+    assert_host_parity,
+    host_oracle,
+    measure_decode_rate,
+    serve_cost,
+)
+from repro.serve_fleet.traffic import PassWindowTraffic, TrafficConfig
+
+__all__ = [
+    "FleetServeEngine",
+    "PassWindowTraffic",
+    "ServeCost",
+    "ServeFleetConfig",
+    "ServeFleetResult",
+    "SplitDecodeEngine",
+    "TrafficConfig",
+    "TrainLoad",
+    "assert_host_parity",
+    "host_oracle",
+    "measure_decode_rate",
+    "serve_cost",
+]

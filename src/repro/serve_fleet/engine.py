@@ -1,0 +1,567 @@
+"""The constellation as an inference fleet.
+
+Two layers, one battery:
+
+* :class:`SplitDecodeEngine` — continuous-batching greedy decode of the
+  SPLIT model: the ground station prefills the prompt (it holds the full
+  weights for segment-B work), the satellite half (embedding + units
+  ``[0, cut)``) runs per-token decode and the smashed boundary
+  activation ``(B, 1, d_model)`` crosses the downlink every generated
+  token.  It subclasses :class:`repro.serve.engine.DecodeEngine` —
+  slot mechanics, bulk prefill, continuous-batching refill and the
+  Pallas decode-attention flag are all inherited; only the jitted
+  decode body (:meth:`_decode_fn`) changes, to
+  :func:`repro.models.lm.decode_step_split`.
+
+* :class:`FleetServeEngine` — the pass-window serving loop at
+  constellation scale, as ONE jitted ``lax.scan`` over windows, vmapped
+  over planes (the fleet engine's shape): per window, Poisson arrivals
+  (:mod:`repro.serve_fleet.traffic`) are routed to the satellite
+  currently overhead (:mod:`repro.serve_fleet.router`), served up to
+  the window's token capacity, and the per-token decode energy
+  (:class:`ServeCost`) is charged through the SAME
+  :class:`repro.sim.energy_state.EnergyState` batteries training
+  drains — so the reserve-skip policy, eclipse gating
+  (:class:`repro.fleet.scenarios.EclipseConfig`) and train-vs-serve
+  contention all act on one battery.  A NumPy host oracle
+  (:func:`host_oracle`) replays the full f32 accounting from the
+  run's realized arrivals: routing/counting telemetry is bit-exact,
+  the joule accumulators match to f32 tolerance (see
+  :func:`assert_host_parity`).
+
+Telemetry (arrivals / served / backlog / battery per window) syncs to
+the host ONCE per :meth:`FleetServeEngine.run`; sustained tokens/sec
+and FIFO p99 latency are derived from it on the host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import PassBudget, clamp_battery
+from repro.core.orbits import OrbitalPlane, PAPER_PLANE
+from repro.fleet.scenarios import EclipseConfig
+from repro.models import lm
+from repro.serve.engine import DecodeEngine, Request
+from repro.serve_fleet import router
+from repro.serve_fleet.traffic import PassWindowTraffic, TrafficConfig
+from repro.sim import energy_state as es
+
+
+# --------------------------------------------------------------------------
+# Split-model decode engine (per-satellite serving capacity).
+# --------------------------------------------------------------------------
+
+class SplitDecodeEngine(DecodeEngine):
+    """Continuous-batching greedy decode with the model cut at a unit
+    boundary: satellite half first, boundary downlink, ground half.
+
+    Numerically identical to the unsplit :class:`DecodeEngine` (two
+    sequential unit scans instead of one) — asserted by the parity
+    tests — so greedy outputs match while every generated token is
+    attributable to a satellite-side FLOP count and a boundary payload.
+    """
+
+    def __init__(self, cfg, params, *, cut_units: int, **kw):
+        self.cut_units = int(cut_units)
+        super().__init__(cfg, params, **kw)
+        # validate the cut eagerly (raises on bad cuts / enc-dec)
+        lm.split_serve_params(cfg, params, self.cut_units)
+
+    def _decode_fn(self, params, cache, tokens, positions):
+        pa, pb = lm.split_serve_params(self.cfg, params, self.cut_units)
+        logits, cache, _boundary = lm.decode_step_split(
+            self.cfg, pa, pb, cache, tokens, positions, ctx=self.ctx)
+        return logits, cache
+
+    @property
+    def boundary_bits_per_token(self) -> float:
+        """Downlink payload per generated token per request: the smashed
+        activation ``(d_model,)`` at the engine's activation dtype."""
+        return float(self.cfg.d_model * jnp.dtype(self.act_dtype).itemsize
+                     * 8)
+
+
+def measure_decode_rate(engine: DecodeEngine, *, n_requests: int = 32,
+                        prompt_len: int = 6, new_tokens: int = 12,
+                        vocab: Optional[int] = None, seed: int = 0,
+                        warmup: bool = True) -> float:
+    """Sustained generated-tokens/sec of one satellite's engine, measured
+    wall-clock over a continuous-batching run (prefill included — it is
+    part of the window's work)."""
+    vocab = engine.cfg.vocab if vocab is None else vocab
+    rng = np.random.default_rng(seed)
+
+    def batch(n, rid0):
+        return [Request(rid=rid0 + i,
+                        prompt=rng.integers(0, vocab, prompt_len)
+                        .astype(np.int32),
+                        max_new_tokens=new_tokens) for i in range(n)]
+
+    if warmup:                      # compile prefill + decode step
+        engine.submit_and_run(batch(min(2, n_requests), 10_000_000))
+    reqs = batch(n_requests, 0)
+    t0 = time.perf_counter()
+    out = engine.submit_and_run(reqs)
+    dt = time.perf_counter() - t0
+    total = sum(len(v) for v in out.values())
+    return total / dt
+
+
+# --------------------------------------------------------------------------
+# Serving cost model (per generated token, satellite side).
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeCost:
+    """What one generated token costs the serving satellite.
+
+    ``tokens_per_s`` is the measured (or assumed) sustained decode rate
+    of one satellite — it caps each pass window's service;
+    ``e_token_j`` is the battery draw per token (eq.-(7) DVFS compute
+    for the satellite half + eq.-(9) downlink energy for the boundary
+    activation); ``dtx_bits_token`` is that boundary payload.
+    """
+
+    tokens_per_s: float
+    e_token_j: float
+    dtx_bits_token: float
+
+    def window_capacity_requests(self, window_s: float,
+                                 tokens_per_request: float) -> float:
+        """Whole requests one pass window can serve (f32 floor — the
+        same constant the device scan and the host oracle share)."""
+        toks = np.float32(self.tokens_per_s) * np.float32(window_s)
+        return float(np.floor(toks / np.float32(tokens_per_request)))
+
+
+def serve_cost(cfg, params, cut_units: int, *, tokens_per_s: float,
+               budget: Optional[PassBudget] = None,
+               tx_power_w: float = 2.0,
+               act_bits: Optional[int] = None) -> ServeCost:
+    """Analytic per-token satellite cost for the split model.
+
+    Per-token decode FLOPs of the satellite half are ``2 x`` its unit
+    parameter count (one MAC per weight per token — embedding gather is
+    free); compute energy follows the paper's DVFS model at ``f_max``,
+    downlink energy the Shannon link at ``tx_power_w`` over the mean
+    slant range.
+    """
+    budget = PassBudget() if budget is None else budget
+    pa, _ = lm.split_serve_params(cfg, params, cut_units)
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree.leaves(pa["units"]))
+    if "shared" in pa:
+        n_params += sum(int(np.prod(x.shape))
+                        for x in jax.tree.leaves(pa["shared"]))
+    flops_tok = 2.0 * n_params
+    e_proc = budget.sat_device.proc_energy_j(
+        flops_tok, budget.sat_device.f_max_hz, 1.0)
+    bits = float(cfg.d_model * (32 if act_bits is None else act_bits))
+    e_comm = budget.link.comm_energy_j(bits, tx_power_w,
+                                       budget.mean_distance_m)
+    return ServeCost(tokens_per_s=float(tokens_per_s),
+                     e_token_j=float(e_proc + e_comm),
+                     dtx_bits_token=bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLoad:
+    """One planned training pass per window, energy-accounting only.
+
+    The serve engine charges the pass the planner already priced (the
+    ``DevicePassPlan`` drain the training fleet executes) so the
+    contention telemetry — trained vs reserve-skipped passes — is exact
+    with respect to the energy policy without re-running SL training
+    inside the serving scan.
+    """
+
+    drain_j: float       # satellite-side battery draw per training pass
+    e_total_j: float     # full eq.-(11) cost recorded per pass
+
+    @classmethod
+    def from_plan(cls, plan) -> "TrainLoad":
+        """Mean per-sat load of a ``DevicePassPlan`` (or anything with
+        ``drain_j`` / ``e_total_j`` array attributes)."""
+        return cls(drain_j=float(np.mean(np.asarray(plan.drain_j))),
+                   e_total_j=float(np.mean(np.asarray(plan.e_total_j))))
+
+
+# --------------------------------------------------------------------------
+# Fleet-scale serving scan.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeFleetConfig:
+    """Constellation + battery policy for the serving fleet."""
+
+    n_planes: int = 1
+    n_sats: int = 8                       # ring slots per plane
+    n_windows: int = 64                   # pass windows per run
+    battery_j: float = 500.0              # capacity (and initial charge)
+    recharge_w: float = 20.0              # solar input while sunlit
+    reserve_serve_j: float = 0.0          # serving gate: min charge to serve
+    reserve_train_j: float = 0.0          # training gate (reserve-skip)
+    eclipse: Optional[EclipseConfig] = None
+    plane: OrbitalPlane = PAPER_PLANE
+    window_s: Optional[float] = None      # None -> plane.pass_duration_s
+
+    @property
+    def pass_window_s(self) -> float:
+        return (self.plane.pass_duration_s if self.window_s is None
+                else self.window_s)
+
+
+class ServeTelemetry(NamedTuple):
+    """Per-(window, plane) serving telemetry (stacked by the scan)."""
+
+    arrivals: Any         # int32 — Poisson arrivals this window
+    served: Any           # f32   — requests served this window
+    backlog: Any          # f32   — queue carried to the next satellite
+    tokens: Any           # f32   — generated tokens this window
+    battery_j: Any        # f32   — serving slot's charge, post-recharge
+    slot: Any             # int32 — which satellite was overhead
+    trained: Any          # int32 — 1 trained / 0 reserve-skipped / -1 n/a
+
+
+@dataclasses.dataclass
+class ServeFleetResult:
+    """One run's synced telemetry, ``(P, K)`` host arrays."""
+
+    cfg: ServeFleetConfig
+    cost: ServeCost
+    traffic: PassWindowTraffic
+    arrivals: np.ndarray
+    served: np.ndarray
+    backlog: np.ndarray
+    tokens: np.ndarray
+    battery_j: np.ndarray
+    slot: np.ndarray
+    trained: np.ndarray
+    energy: es.EnergyState          # final (P, M) state, host arrays
+    run_s: float = float("nan")
+
+    @property
+    def window_s(self) -> float:
+        return self.cfg.pass_window_s
+
+    def sustained_tokens_per_s(self) -> float:
+        """Fleet-wide generated tokens per wall-second of orbit time."""
+        K = self.arrivals.shape[1]
+        return float(self.tokens.sum() / (K * self.window_s))
+
+    def request_service_s(self) -> float:
+        """One request's own decode time on the serving satellite."""
+        return float(self.traffic.cfg.decode_len / self.cost.tokens_per_s)
+
+    def p99_latency_s(self, q: float = 0.99) -> float:
+        """FIFO latency quantile over every served request, all planes."""
+        waits = [router.fifo_latency_windows(self.arrivals[p],
+                                             self.served[p])
+                 for p in range(self.arrivals.shape[0])]
+        waits = np.concatenate(waits) if waits else np.zeros((0,))
+        if waits.size == 0:
+            return float("nan")
+        lat = waits * self.window_s + self.request_service_s()
+        return float(np.quantile(lat, q))
+
+    def summary(self) -> Dict[str, Any]:
+        trained = self.trained[self.trained >= 0]
+        return {
+            "n_planes": self.cfg.n_planes,
+            "n_sats": self.cfg.n_sats,
+            "n_windows": int(self.arrivals.shape[1]),
+            "window_s": self.window_s,
+            "offered_users_per_day": self.traffic.cfg.users_per_day,
+            "arrived_requests": int(self.arrivals.sum()),
+            "served_requests": float(self.served.sum()),
+            "final_backlog_requests": float(self.backlog[:, -1].sum()),
+            "sustained_tokens_per_s": self.sustained_tokens_per_s(),
+            "p99_latency_s": self.p99_latency_s(),
+            "serve_energy_spent_j": float(
+                np.sum(self.energy.energy_spent_j)),
+            "trained_passes": int(trained.sum()) if trained.size else None,
+            "skipped_passes": (int((trained == 0).sum())
+                               if trained.size else None),
+            "min_battery_j": float(self.battery_j.min())
+            if self.battery_j.size else float("nan"),
+        }
+
+
+class FleetServeEngine:
+    """Device-resident pass-window serving loop (chainable runs).
+
+    The whole (window x plane) loop is ONE jitted ``lax.scan``:
+    arrivals are realized eagerly by the traffic host twin
+    (``realize(K, start=k)`` — ``fold_in`` on the absolute window
+    index, so chained runs continue the same stream) and fed to the
+    scan as inputs (the NumPy oracle replays the bit-identical array),
+    the serving slot is the ring rotation, service is FIFO up to the
+    window's token capacity, and every joule moves through
+    ``EnergyState`` — ``apply_serve`` for decode drain, ``apply_pass``
+    for the optional concurrent :class:`TrainLoad` (reserve-skip reads
+    the post-serve battery: that is the contention), eclipse-gated
+    ``recharge`` last.  ``traces`` / ``device_calls`` / ``host_syncs``
+    count as in the sim/fleet engines: one trace per distinct window
+    count, one host sync per run.
+    """
+
+    def __init__(self, cfg: ServeFleetConfig, traffic: TrafficConfig,
+                 cost: ServeCost, *, train: Optional[TrainLoad] = None):
+        self.cfg = cfg
+        self.cost = cost
+        self.train = train
+        self.traffic = PassWindowTraffic(traffic, cfg.pass_window_s,
+                                         cfg.n_planes)
+        P, M = cfg.n_planes, cfg.n_sats
+        self.energy = es.EnergyState(
+            battery_j=jnp.full((P, M), cfg.battery_j, jnp.float32),
+            energy_spent_j=jnp.zeros((P, M), jnp.float32),
+            passes_served=jnp.zeros((P, M), jnp.int32),
+            passes_skipped=jnp.zeros((P, M), jnp.int32))
+        self.backlog = jnp.zeros((P,), jnp.float32)
+        self.k = 0
+        self.traces = 0
+        self.device_calls = 0
+        self.host_syncs = 0
+        self._fns: Dict[int, Any] = {}
+        # f32 constants shared verbatim with the host oracle
+        self._c = serve_constants(cfg, self.traffic, cost, train)
+
+    # ------------------------------------------------------------- compile
+    def _compiled(self, n_windows: int):
+        if n_windows in self._fns:
+            return self._fns[n_windows]
+        cfg, train = self.cfg, self.train
+        P, M = cfg.n_planes, cfg.n_sats
+        c = self._c
+        eclipse = cfg.eclipse
+        plane_ids = jnp.arange(P, dtype=jnp.int32)
+        member = jnp.ones((M,), bool)     # static ring: everyone alive
+
+        def closed_loop(backlog, energy, k0, arrivals):
+            self.traces += 1              # side effect fires at trace time
+
+            def plane_window(plane, backlog_p, energy_p, k, a_i):
+                slot = router.serving_slot(member, k, xp=jnp)
+                serve_ok = energy_p.battery_j[slot] >= c["reserve_serve"]
+                served, backlog_p = router.drain_queue(
+                    backlog_p, a_i.astype(jnp.float32), c["cap_req"],
+                    serve_ok, xp=jnp)
+                tokens = served * c["tok_per_req"]
+                energy_p = es.apply_serve(energy_p, slot,
+                                          tokens * c["e_token"],
+                                          c["capacity"])
+                if train is not None:
+                    # contention: the reserve-skip gate reads the
+                    # POST-serve battery — serving drain is what flips
+                    # a trained pass into a skip
+                    trains = (energy_p.battery_j[slot]
+                              >= c["reserve_train"])
+                    energy_p = es.apply_pass(
+                        energy_p, slot, c["train_drain"],
+                        c["train_e_total"], c["capacity"], trains)
+                    trained_i = trains.astype(jnp.int32)
+                else:
+                    trained_i = jnp.int32(-1)
+                sunlit = (None if eclipse is None
+                          else eclipse.sunlit(k, plane))
+                energy_p = es.recharge(energy_p, c["recharge"],
+                                       c["capacity"], sunlit=sunlit)
+                telem = ServeTelemetry(
+                    arrivals=a_i, served=served, backlog=backlog_p,
+                    tokens=tokens, battery_j=energy_p.battery_j[slot],
+                    slot=slot, trained=trained_i)
+                return backlog_p, energy_p, telem
+
+            vwin = jax.vmap(plane_window, in_axes=(0, 0, 0, None, 0))
+
+            def body(carry, a_k):
+                backlog, energy, k = carry
+                backlog, energy, telem = vwin(plane_ids, backlog,
+                                              energy, k, a_k)
+                return (backlog, energy, k + 1), telem
+
+            (backlog, energy, k), telem = jax.lax.scan(
+                body, (backlog, energy, k0), arrivals)
+            return backlog, energy, k, telem
+
+        fn = jax.jit(closed_loop, donate_argnums=(0, 1))
+        self._fns[n_windows] = fn
+        return fn
+
+    # ----------------------------------------------------------------- run
+    def run(self, n_windows: Optional[int] = None) -> ServeFleetResult:
+        K = self.cfg.n_windows if n_windows is None else n_windows
+        if K < 1:
+            raise ValueError("need at least one pass window")
+        fn = self._compiled(K)
+        # realize the traffic eagerly (host twin, absolute window
+        # offset) and feed it to the scan: the oracle replays the
+        # bit-identical array
+        arrivals = jnp.asarray(
+            self.traffic.realize(K, start=self.k).T)   # (K, P) scan xs
+        t0 = time.perf_counter()
+        self.device_calls += 1
+        backlog, energy, k, telem = fn(self.backlog, self.energy,
+                                       jnp.int32(self.k), arrivals)
+        telem = jax.tree.map(np.asarray, telem)        # ONE host sync
+        self.host_syncs += 1
+        dt = time.perf_counter() - t0
+        self.backlog, self.energy, self.k = backlog, energy, int(k)
+        host = jax.tree.map(np.asarray, energy)
+        # scan stacks (K, P); results read (P, K)
+        return ServeFleetResult(
+            cfg=self.cfg, cost=self.cost, traffic=self.traffic,
+            arrivals=telem.arrivals.T, served=telem.served.T,
+            backlog=telem.backlog.T, tokens=telem.tokens.T,
+            battery_j=telem.battery_j.T, slot=telem.slot.T,
+            trained=telem.trained.T,
+            energy=es.EnergyState(*host), run_s=dt)
+
+
+# --------------------------------------------------------------------------
+# NumPy host oracle (f32 energy parity).
+# --------------------------------------------------------------------------
+
+def serve_constants(cfg: ServeFleetConfig, traffic: PassWindowTraffic,
+                    cost: ServeCost,
+                    train: Optional[TrainLoad]) -> Dict[str, np.float32]:
+    """Every scalar the serving scan folds into its f32 arithmetic,
+    pre-rounded to f32 ONCE so the device scan and the NumPy oracle
+    consume bit-identical constants."""
+    w = traffic.window_s
+    c = {
+        "capacity": cfg.battery_j,
+        "recharge": cfg.recharge_w * w,
+        "reserve_serve": cfg.reserve_serve_j,
+        "reserve_train": cfg.reserve_train_j,
+        "tok_per_req": traffic.cfg.tokens_per_request,
+        "e_token": cost.e_token_j,
+        "cap_req": cost.window_capacity_requests(
+            w, traffic.cfg.tokens_per_request),
+        "train_drain": 0.0 if train is None else train.drain_j,
+        "train_e_total": 0.0 if train is None else train.e_total_j,
+    }
+    return {k: np.float32(v) for k, v in c.items()}
+
+
+def host_oracle(cfg: ServeFleetConfig, traffic: PassWindowTraffic,
+                cost: ServeCost, train: Optional[TrainLoad],
+                n_windows: int,
+                arrivals: Optional[np.ndarray] = None
+                ) -> Dict[str, np.ndarray]:
+    """Replay ``n_windows`` serving windows from a fresh fleet in NumPy
+    f32 scalars — same arrivals, same constants
+    (:func:`serve_constants`), same operation order — and return the
+    telemetry the device scan must reproduce (bit-exact for
+    routing/counting, f32-tolerance for the fused joule accumulators —
+    see :func:`assert_host_parity`).
+
+    ``arrivals`` defaults to the traffic host twin from window 0
+    (``traffic.realize(n_windows)`` — what a fresh fleet's first run
+    consumes); pass an explicit array to replay a different stream,
+    e.g. a chained run's ``result.arrivals``.
+    """
+    P, M = cfg.n_planes, cfg.n_sats
+    c = serve_constants(cfg, traffic, cost, train)
+    arr = (traffic.realize(n_windows) if arrivals is None
+           else np.asarray(arrivals, np.int32))        # (P, K) int32
+    f32 = np.float32
+    battery = np.full((P, M), f32(cfg.battery_j), f32)
+    spent = np.zeros((P, M), f32)
+    srv = np.zeros((P, M), np.int32)
+    skp = np.zeros((P, M), np.int32)
+    backlog = np.zeros((P,), f32)
+    t_served = np.zeros((P, n_windows), f32)
+    t_backlog = np.zeros((P, n_windows), f32)
+    t_tokens = np.zeros((P, n_windows), f32)
+    t_battery = np.zeros((P, n_windows), f32)
+    t_trained = np.full((P, n_windows), -1, np.int32)
+    for k in range(n_windows):
+        for p in range(P):
+            slot = int(router.serving_slot(np.ones((M,), bool), k))
+            ok = battery[p, slot] >= c["reserve_serve"]
+            served, backlog[p] = router.drain_queue(
+                backlog[p], f32(arr[p, k]), c["cap_req"], ok, xp=np)
+            tokens = f32(served * c["tok_per_req"])
+            drain = f32(tokens * c["e_token"])
+            battery[p, slot] = clamp_battery_f32(
+                f32(battery[p, slot] - drain), c["capacity"])
+            spent[p, slot] = f32(spent[p, slot] + drain)
+            if train is not None:
+                trains = battery[p, slot] >= c["reserve_train"]
+                if trains:
+                    battery[p, slot] = clamp_battery_f32(
+                        f32(battery[p, slot] - c["train_drain"]),
+                        c["capacity"])
+                    spent[p, slot] = f32(spent[p, slot]
+                                         + c["train_e_total"])
+                    srv[p, slot] += 1
+                else:
+                    skp[p, slot] += 1
+                t_trained[p, k] = int(trains)
+            sunlit = (True if cfg.eclipse is None
+                      else bool(cfg.eclipse.sunlit(k, p)))
+            if sunlit:
+                battery[p] = np.minimum(
+                    np.maximum(battery[p] + c["recharge"], f32(0.0)),
+                    c["capacity"])
+            t_served[p, k] = served
+            t_backlog[p, k] = backlog[p]
+            t_tokens[p, k] = tokens
+            t_battery[p, k] = battery[p, slot]
+    return {"arrivals": arr, "served": t_served, "backlog": t_backlog,
+            "tokens": t_tokens, "battery_j": t_battery,
+            "trained": t_trained, "final_battery_j": battery,
+            "energy_spent_j": spent, "passes_served": srv,
+            "passes_skipped": skp}
+
+
+def clamp_battery_f32(battery: np.float32, capacity: np.float32):
+    """f32 scalar twin of :func:`repro.core.energy.clamp_battery`
+    (``jnp.clip`` = max-then-min, replayed in NumPy f32)."""
+    return np.minimum(np.maximum(battery, np.float32(0.0)), capacity)
+
+
+def assert_host_parity(result: ServeFleetResult,
+                       train: Optional[TrainLoad]) -> Dict[str, np.ndarray]:
+    """Assert the host-vs-device parity contract for a fresh-fleet run
+    and return the oracle telemetry.
+
+    Routing and counting are BIT-exact (arrivals — the engine and the
+    oracle consume the same realized array by construction —
+    served/backlog/token counts (all integer-valued f32), the
+    trained/skipped decisions and the pass counters).  The joule
+    accumulators (battery trajectory, ``energy_spent_j``) are asserted
+    at f32 tolerance: XLA fuses the scan's multiply-accumulate chains
+    into FMAs whose single rounding the NumPy scalar replay cannot
+    reproduce, so these agree to ~1 ulp per window rather than
+    bit-for-bit.  Battery trajectories must also sit in
+    ``[0, capacity]`` — the clamp policy's invariant.
+    """
+    K = result.arrivals.shape[1]
+    o = host_oracle(result.cfg, result.traffic, result.cost, train, K)
+    np.testing.assert_array_equal(result.arrivals, o["arrivals"])
+    np.testing.assert_array_equal(result.served, o["served"])
+    np.testing.assert_array_equal(result.tokens, o["tokens"])
+    np.testing.assert_array_equal(result.backlog, o["backlog"])
+    np.testing.assert_array_equal(result.trained, o["trained"])
+    np.testing.assert_array_equal(np.asarray(result.energy.passes_served),
+                                  o["passes_served"])
+    np.testing.assert_array_equal(np.asarray(result.energy.passes_skipped),
+                                  o["passes_skipped"])
+    tol = dict(rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(result.battery_j, o["battery_j"], **tol)
+    np.testing.assert_allclose(np.asarray(result.energy.battery_j),
+                               o["final_battery_j"], **tol)
+    np.testing.assert_allclose(np.asarray(result.energy.energy_spent_j),
+                               o["energy_spent_j"], **tol)
+    assert float(result.battery_j.min()) >= 0.0
+    assert float(result.battery_j.max()) <= result.cfg.battery_j
+    return o

@@ -1,0 +1,94 @@
+"""Pass-window-aware request routing for the serving fleet.
+
+An arrival lands on whichever satellite is currently overhead — the
+serving-slot rotation the fleet engine computes with its aliveness
+cumsum/argmax (``ring[k % n_alive]`` over alive slots, in slot order).
+A window that closes before its backlog drains carries the queue over
+to the NEXT satellite in the ring: the ground terminal holds the queue,
+so routing is simply "the head of the FIFO goes to the current serving
+slot, up to its window capacity".
+
+Every function here is ``xp``-agnostic (pass ``numpy`` or
+``jax.numpy``): the device engine calls them with ``jnp`` inside its
+jitted scan, the NumPy host oracle calls the SAME code with ``np`` —
+one implementation, two executions, which is what the f32 energy-parity
+assertion leans on (the fleet scenarios module set this pattern).
+
+FIFO latency is reconstructed on the host from per-window
+``(arrivals, served)`` telemetry: under FIFO service the ``i``-th
+request ever arrived is the ``i``-th ever served, so arrival and
+service windows come from two ``searchsorted`` calls on the cumulative
+counts — no per-request state in the scan.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def serving_slot(member, k, xp=np):
+    """Slot currently overhead: ``ring[k % n_alive]`` over alive slots.
+
+    ``member``: bool ``(M,)`` aliveness mask; returns -1 when nobody is
+    alive.  Identical semantics (and code shape) to the fleet engine's
+    in-scan rotation."""
+    member = xp.asarray(member)
+    n_alive = member.sum()
+    served = n_alive > 0
+    rank = xp.where(served, k % xp.maximum(n_alive, 1), 0)
+    cums = xp.cumsum(member.astype(xp.int32))
+    slot = xp.argmax((cums == rank + 1) & member)
+    return xp.where(served, slot, -1).astype(xp.int32)
+
+
+def drain_queue(backlog, arrivals, capacity, serve_ok, xp=np):
+    """One window of FIFO service at the current serving slot.
+
+    ``backlog`` carries over from the previous window (the previous
+    satellite's unfinished queue, now routed to this one).  ``serve_ok``
+    gates service (battery reserve / eclipse-dead slot): a gated window
+    serves nothing and the whole queue carries over.  All f32 scalar
+    arithmetic — the NumPy oracle replays it bit-for-bit.
+
+    Returns ``(served, new_backlog)``.
+    """
+    offered = backlog + arrivals
+    served = xp.where(serve_ok, xp.minimum(offered, capacity),
+                      xp.float32(0.0))
+    return served, offered - served
+
+
+def fifo_latency_windows(arrivals, served) -> np.ndarray:
+    """Per-request queueing delay, in whole windows, under FIFO service.
+
+    ``arrivals`` / ``served`` are per-window counts ``(K,)`` (host
+    NumPy).  Request ordinal ``i`` arrives in the first window whose
+    cumulative arrivals reach ``i`` and is served in the first window
+    whose cumulative served count reaches ``i``; the delay is the window
+    difference (0 = served within its arrival window).  Requests still
+    in the backlog at the end of the trace are not counted.
+    """
+    arrivals = np.asarray(arrivals, np.float64)
+    served = np.asarray(served, np.float64)
+    cum_a = np.cumsum(arrivals)
+    cum_s = np.cumsum(served)
+    n_served = int(round(cum_s[-1])) if cum_s.size else 0
+    if n_served == 0:
+        return np.zeros((0,), np.int64)
+    idx = np.arange(1, n_served + 1, dtype=np.float64) - 0.5
+    arrive_w = np.searchsorted(cum_a, idx)
+    serve_w = np.searchsorted(cum_s, idx)
+    return (serve_w - arrive_w).astype(np.int64)
+
+
+def latency_quantile_s(arrivals, served, window_s: float,
+                       service_s: float = 0.0, q: float = 0.99) -> float:
+    """Latency quantile in seconds over all served requests.
+
+    Window-granular: a request waits ``delay`` whole windows in the
+    terminal queue, plus ``service_s`` (its own prefill+decode time on
+    the serving satellite).  Returns NaN when nothing was served.
+    """
+    waits = fifo_latency_windows(arrivals, served)
+    if waits.size == 0:
+        return float("nan")
+    return float(np.quantile(waits * float(window_s) + service_s, q))

@@ -1,0 +1,124 @@
+"""Seeded synthetic ground traffic for the serving fleet.
+
+Millions of users hitting a ground terminal are modeled as Poisson
+request arrivals with a diurnal (24 h sinusoid) intensity profile,
+realized PER PASS WINDOW: window ``k`` of plane ``p`` receives
+``Poisson(lam_p(k))`` requests, where ``lam_p(k)`` follows the daily
+cycle evaluated at the window's wall-clock time.  Parameterization is
+in **users/day** (scaled to millions — the ROADMAP north star) with a
+per-user daily request rate; the fleet splits the offered load evenly
+across its planes (one ground terminal per plane, each seeing whichever
+satellite of its plane is overhead — the paper's time-window geometry).
+
+In the style of :class:`repro.sim.data.DeviceImageryShards`, the
+arrival draw is a pure function of ``(seed, plane, window)`` built on
+``jax.random.fold_in``: ``__call__`` composes under ``jit``/``scan``
+and, called eagerly, IS the NumPy host twin — :meth:`realize` returns
+the counts as a host array.  The serving fleet engine feeds
+``realize`` output to its device scan as inputs rather than calling
+``__call__`` in-trace: at millions-scale rates XLA fuses the traced
+intensity arithmetic into FMAs whose lambda sits 1 ulp from the eager
+twin's, and one flipped Poisson rejection round yields a completely
+different (same-distribution) draw — realizing once and sharing the
+array makes host-vs-device arrival parity exact by construction.
+:meth:`prompts` derives per-window token batches for the real
+split-decode engine from the same stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """Offered load: ``users_per_day`` users, each issuing
+    ``requests_per_user_day`` requests/day on average, with requests of
+    ``prompt_len`` prompt tokens decoding ``decode_len`` new tokens."""
+
+    users_per_day: float = 1.0e6
+    requests_per_user_day: float = 1.0
+    prompt_len: int = 8
+    decode_len: int = 16
+    diurnal_amp: float = 0.5        # peak deviation from the mean rate
+    peak_utc_s: float = 43_200.0    # daily peak (noon by default)
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.diurnal_amp <= 1.0:
+            raise ValueError(f"diurnal_amp must be in [0, 1], "
+                             f"got {self.diurnal_amp}")
+
+    @property
+    def tokens_per_request(self) -> float:
+        return float(self.decode_len)
+
+    def mean_rate_per_s(self, n_planes: int = 1) -> float:
+        """Mean fleet arrival rate split over ``n_planes`` terminals."""
+        return (self.users_per_day * self.requests_per_user_day
+                / 86_400.0 / n_planes)
+
+
+@dataclasses.dataclass(frozen=True)
+class PassWindowTraffic:
+    """Traceable ``(plane, k) -> arrival count`` for pass window ``k``.
+
+    ``window_s`` is the pass-window duration (the plane's
+    ``pass_duration_s``); ``n_planes`` divides the configured offered
+    load across terminals.  ``traceable = True`` advertises the
+    device-scan contract (same flag as the sim data providers).
+    """
+
+    cfg: TrafficConfig = TrafficConfig()
+    window_s: float = 228.0
+    n_planes: int = 1
+
+    traceable = True
+
+    # ------------------------------------------------------------- intensity
+    def rate(self, k):
+        """Mean arrivals in window ``k`` (pure arithmetic: works on
+        Python ints, NumPy arrays and traced JAX values alike)."""
+        c = self.cfg
+        base = c.mean_rate_per_s(self.n_planes) * self.window_s
+        t = (jnp.asarray(k, jnp.float32) + 0.5) * self.window_s
+        day = 2.0 * jnp.pi * (t - c.peak_utc_s) / 86_400.0
+        return base * (1.0 + c.diurnal_amp * jnp.cos(day))
+
+    # -------------------------------------------------------------- arrivals
+    def __call__(self, plane, k):
+        """Poisson arrival count for ``(plane, window k)`` — int32."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.cfg.seed),
+                               jnp.asarray(plane, jnp.uint32)),
+            jnp.asarray(k, jnp.uint32))
+        return jax.random.poisson(key, self.rate(k)).astype(jnp.int32)
+
+    def realize(self, n_windows: int, start: int = 0) -> np.ndarray:
+        """Host twin: arrival counts for windows ``[start, start +
+        n_windows)`` of every plane as a ``(n_planes, n_windows)``
+        NumPy array — one eager vmapped call of the identical pure
+        function.  This array IS the serving fleet's traffic: the
+        engine feeds it to its scan and the NumPy oracle replays it,
+        so both consume exactly the same draws."""
+        planes = jnp.arange(self.n_planes, dtype=jnp.uint32)
+        ks = jnp.arange(start, start + n_windows, dtype=jnp.uint32)
+        grid = jax.vmap(lambda p: jax.vmap(lambda k: self(p, k))(ks))(planes)
+        return np.asarray(grid)
+
+    # --------------------------------------------------------------- prompts
+    def prompts(self, plane: int, k: int, n: int, vocab: int) -> np.ndarray:
+        """``(n, prompt_len)`` int32 prompt batch for window ``k`` —
+        seeded from the same stream (host-eager; feeds the real
+        split-decode engine in the measured path and the smoke)."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(
+                jax.random.fold_in(jax.random.key(self.cfg.seed),
+                                   jnp.uint32(plane)),
+                jnp.uint32(k)), jnp.uint32(0xB0B))
+        toks = jax.random.randint(
+            key, (n, self.cfg.prompt_len), 0, vocab, dtype=jnp.int32)
+        return np.asarray(toks)

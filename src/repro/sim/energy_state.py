@@ -78,6 +78,26 @@ def recharge(state: EnergyState, energy_j, capacity_j,
         battery_j=clamp_battery(state.battery_j + gain, capacity_j))
 
 
+def apply_serve(state: EnergyState, sat, drain_j, capacity_j) -> EnergyState:
+    """Account inference drain for satellite ``sat`` (all args traceable).
+
+    Serving draws from the SAME battery training drains — that sharing
+    is the whole point of the serve-fleet subsystem: a decode-heavy
+    pass window leaves less charge for the next training pass, and the
+    reserve-skip policy sees it.  ``drain_j`` (per-window decode energy:
+    tokens x (E_proc + E_comm^down per token)) is subtracted from the
+    battery AND recorded in ``energy_spent_j`` so the eq.-(11)
+    accounting covers both workloads; the pass counters are untouched
+    (serving is not a training pass — the serve engine keeps its own
+    token/request telemetry).
+    """
+    d = jnp.asarray(drain_j, jnp.float32)
+    battery = state.battery_j.at[sat].add(-d)
+    return state._replace(
+        battery_j=clamp_battery(battery, capacity_j),
+        energy_spent_j=state.energy_spent_j.at[sat].add(d))
+
+
 def apply_pass(state: EnergyState, sat, drain_j, e_total_j, capacity_j,
                trained, skipped: Optional[Any] = None) -> EnergyState:
     """Account one pass for satellite ``sat`` (all args traceable).

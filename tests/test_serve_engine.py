@@ -1,14 +1,29 @@
-"""Serving engine: continuous batching, greedy parity with forward."""
+"""Serving engine: continuous batching, greedy parity with forward,
+bulk-vs-loop prefill, Pallas decode routing, and edge cases."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.models import lm
 from repro.models.layers import Ctx
 from repro.serve.engine import DecodeEngine, Request
+
+
+def _granite():
+    cfg = configs.get_smoke("granite_3_2b")
+    return cfg, lm.init(cfg, jax.random.key(0))
+
+
+def _requests(cfg, n, prompt_len=5, new=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, prompt_len)
+                    .astype(np.int32), max_new_tokens=new)
+            for i in range(n)]
 
 
 def test_engine_serves_all_requests():
@@ -50,3 +65,125 @@ def test_engine_greedy_matches_forward_argmax():
     # engine records the token *consumed* at each step: first entry is
     # the model's continuation of the prompt, etc.
     assert out[0] == oracle
+
+
+# --------------------------------------------------------------------------
+# Bulk prefill (the _prefill_into_slot fix) and Pallas decode routing.
+# --------------------------------------------------------------------------
+
+def test_bulk_prefill_matches_loop_reference():
+    """The bulk prefill path (forward in prefill mode + cache splice)
+    must generate the same greedy tokens as the legacy token-by-token
+    loop on an attention-only arch (where the loop's zero-token writes
+    into other slots are overwritten and thus merely wasteful)."""
+    cfg, params = _granite()
+
+    def run(mode):
+        eng = DecodeEngine(cfg, params, n_slots=2, s_max=48,
+                           act_dtype=jnp.float32, prefill=mode)
+        return eng.submit_and_run(_requests(cfg, 4))
+
+    assert run("bulk") == run("loop")
+
+
+def test_bulk_prefill_isolates_recurrent_slots():
+    """On an arch with recurrent state (zamba2: mamba2 blocks) the loop
+    prefill corrupted every OTHER live slot's state by pushing zero
+    tokens through the full batch; bulk prefill must leave concurrent
+    slots untouched, so multi-slot output == one-request-at-a-time
+    output."""
+    cfg = configs.get_smoke("zamba2_1_2b")
+    params = lm.init(cfg, jax.random.key(1))
+    reqs = _requests(cfg, 3, new=4)
+
+    solo = {}
+    for r in reqs:
+        eng = DecodeEngine(cfg, params, n_slots=1, s_max=32,
+                           act_dtype=jnp.float32)
+        solo.update(eng.submit_and_run(
+            [dataclasses.replace(r, out_tokens=None)]))
+
+    eng = DecodeEngine(cfg, params, n_slots=3, s_max=32,
+                       act_dtype=jnp.float32)
+    batched = eng.submit_and_run(
+        [dataclasses.replace(r, out_tokens=None) for r in reqs])
+    assert batched == solo
+
+
+def test_engine_pallas_decode_parity():
+    """use_pallas=True routes decode attention through the Pallas
+    flash-decode kernel (interpret mode on CPU); greedy outputs must
+    match the reference jnp path exactly."""
+    cfg, params = _granite()
+
+    def run(flag):
+        eng = DecodeEngine(cfg, params, n_slots=2, s_max=32,
+                           act_dtype=jnp.float32, use_pallas=flag)
+        return eng.submit_and_run(_requests(cfg, 3, new=4))
+
+    assert run(False) == run(True)
+
+
+# --------------------------------------------------------------------------
+# Edge cases.
+# --------------------------------------------------------------------------
+
+def test_zero_new_tokens_completes_immediately():
+    cfg, params = _granite()
+    eng = DecodeEngine(cfg, params, n_slots=2, s_max=32,
+                       act_dtype=jnp.float32)
+    reqs = _requests(cfg, 3)
+    reqs[1] = dataclasses.replace(reqs[1], max_new_tokens=0)
+    out = eng.submit_and_run(reqs)
+    assert out[1] == []
+    assert len(out[0]) == 6 and len(out[2]) == 6
+
+
+def test_all_zero_budget_requests():
+    cfg, params = _granite()
+    eng = DecodeEngine(cfg, params, n_slots=2, s_max=32,
+                       act_dtype=jnp.float32)
+    out = eng.submit_and_run([
+        dataclasses.replace(r, max_new_tokens=0)
+        for r in _requests(cfg, 2)])
+    assert out == {0: [], 1: []}
+
+
+def test_prompt_at_least_s_max_raises():
+    cfg, params = _granite()
+    eng = DecodeEngine(cfg, params, n_slots=1, s_max=8,
+                       act_dtype=jnp.float32)
+    with pytest.raises(ValueError, match="s_max"):
+        eng.submit_and_run(_requests(cfg, 1, prompt_len=8))
+
+
+def test_empty_request_list():
+    cfg, params = _granite()
+    eng = DecodeEngine(cfg, params, n_slots=2, s_max=32,
+                       act_dtype=jnp.float32)
+    assert eng.submit_and_run([]) == {}
+
+
+def test_more_requests_than_slots_fifo_refill():
+    """With 1 slot, 4 requests: slots must be (re)filled in submission
+    order and every request still gets its own continuation."""
+    cfg, params = _granite()
+
+    filled = []
+
+    class Tracing(DecodeEngine):
+        def _prefill_into_slot(self, slot, req):
+            filled.append(req.rid)
+            super()._prefill_into_slot(slot, req)
+
+    eng = Tracing(cfg, params, n_slots=1, s_max=32,
+                  act_dtype=jnp.float32)
+    reqs = _requests(cfg, 4, new=3)
+    out = eng.submit_and_run(reqs)
+    assert filled == [0, 1, 2, 3]                # FIFO refill order
+    # each request's output equals its solo greedy continuation
+    for r in reqs:
+        solo = DecodeEngine(cfg, params, n_slots=1, s_max=32,
+                            act_dtype=jnp.float32)
+        assert solo.submit_and_run(
+            [dataclasses.replace(r, out_tokens=None)])[r.rid] == out[r.rid]
