@@ -49,6 +49,35 @@ def _git_rev() -> str:
         return "dev"
 
 
+def run_header(quick: bool) -> dict:
+    """The shared run header emitted into every BENCH JSON: everything
+    needed to judge whether two trend rows are comparable (same jax,
+    same device topology, same mode) across machines."""
+    import platform
+
+    import jax
+
+    devices = jax.devices()
+    try:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh()
+        mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    except Exception:                              # pragma: no cover
+        mesh_shape = None
+    return {
+        "rev": _git_rev(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": len(devices),
+        "device_kind": devices[0].device_kind if devices else None,
+        "mesh_shape": mesh_shape,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "quick": quick,
+    }
+
+
 def engine_benchmarks():
     """Before/after rows for the batched pass engine (the tentpole):
 
@@ -843,7 +872,17 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     t0 = time.time()
+    # a fresh global metrics registry: every engine any section builds
+    # parents to it, and its aggregate snapshot becomes the BENCH
+    # "metrics" block below
+    from repro.obs.metrics import global_registry, reset_global
+
+    reset_global()
     results = {}
+    results["header"] = run_header(args.quick)
+    print("== run header ==")
+    for k, v in results["header"].items():
+        print(f"  {k}: {v}")
 
     def section(name, fn, *a, **kw):
         # one failing section must not take the whole run (and its
@@ -883,6 +922,10 @@ def main(argv=None) -> None:
     results["meta"] = {"rev": rev, "wall_s": time.time() - t0,
                        "unix_time": time.time(), "quick": args.quick,
                        "errored_sections": errored}
+    # aggregate registry snapshot across every engine the sections
+    # built: sim.*/fleet.*/serve_fleet.* traces / device_calls /
+    # host_syncs / events_recorded counters + dispatch_s histograms
+    results["metrics"] = global_registry().to_dict()
 
     os.makedirs("results", exist_ok=True)
     if not args.quick:

@@ -13,6 +13,12 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# scan-purity lint: no jax.debug.print / .block_until_ready / host
+# numpy inside the engines' jitted scan bodies (the sync-contract
+# footguns) — cheap, so it runs in both modes, before anything slow
+echo "== scan-purity lint (engine scan bodies stay host-op-free) =="
+python scripts/lint_scan_purity.py
+
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== tier-1 pytest =="
     python -m pytest -x -q
@@ -38,6 +44,12 @@ else
     # energy parity on the shared train/serve batteries)
     echo "== serve-fleet smoke (split decode + pass-window serving) =="
     python -m repro.serve_fleet
+    # flight-recorder smoke: record->flush->render a degraded fleet run
+    # + delegated sim + serve fleet under a sync_budget guard; event
+    # counts and payloads must match the dense telemetry, and the
+    # merged Chrome-trace JSON must validate
+    echo "== flight-recorder smoke (rings -> metrics -> timeline) =="
+    python -m repro.obs
 fi
 
 echo "== quick benchmark smoke (solver backends + sweep + closed loop) =="

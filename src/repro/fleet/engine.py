@@ -43,6 +43,7 @@ elastic runs here (P=1) instead of refusing them.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
@@ -50,6 +51,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import PassBudget, clamp_battery
+from repro.obs.metrics import (MetricsRegistry, counter_property,
+                               global_registry)
+from repro.obs.ring import (EV_EXCHANGE, EV_PASS, FlightRecorder,
+                            record as ring_record, ring_init)
 from repro.core.sl_step import (SplitAdapter, dedupe_state_buffers,
                                 make_pass_step)
 from repro.core.train_state import SLTrainState
@@ -190,10 +195,18 @@ class FleetEngine:
     replicates it to a ``(P, ...)``-leading fleet state sharded over
     the plane mesh axis.
 
-    Observability: ``traces`` / ``device_calls`` / ``host_syncs``
-    counters with the same ≤-1-sync-per-revolution contract as the
-    static engine.
+    Observability: every pass records an ``EV_PASS`` event (and every
+    inter-plane exchange an ``EV_EXCHANGE`` marker) into a per-plane
+    :class:`~repro.obs.ring.TelemetryRing` sharded with the carry,
+    flushed into ``self.recorder`` at the existing telemetry sync.
+    The ``traces`` / ``device_calls`` / ``host_syncs`` counters live on
+    ``self.metrics`` (namespace ``fleet``) with the same
+    ≤-1-sync-per-revolution contract as the static engine.
     """
+
+    traces = counter_property("traces")
+    device_calls = counter_property("device_calls")
+    host_syncs = counter_property("host_syncs")
 
     def __init__(self, adapter: SplitAdapter, budget: PassBudget,
                  batch_fn: Callable[[Any, Any], Dict],
@@ -299,10 +312,19 @@ class FleetEngine:
         self._pass_step = make_pass_step(
             adapter, self.optimizer,
             quantize_boundary=cfg.quantize_boundary)
+        # stateless streams for beyond-horizon draws: fold_in on the
+        # pass index (and plane) means chained runs need no RNG carry.
+        # Built here, not inside the traced program — the scan bodies
+        # stay host-op-free (scripts/lint_scan_purity.py).
+        base_key = jax.random.key(np.uint32(cfg.seed))
+        self._fail_key = jax.random.fold_in(base_key, 1)
+        self._spread_key = jax.random.fold_in(base_key, 2)
+        self._noise_key = jax.random.fold_in(base_key, 3)
         self._fns: Dict[int, Any] = {}
-        self.traces = 0
-        self.device_calls = 0
-        self.host_syncs = 0
+        self.metrics = MetricsRegistry("fleet", parent=global_registry())
+        self.metrics.gauge("n_planes").set(P)
+        self.metrics.gauge("n_slots").set(M)
+        self.recorder = FlightRecorder(self.metrics)
 
     # ------------------------------------------------------- the program
     def _compiled(self, n_revolutions: int):
@@ -336,12 +358,9 @@ class FleetEngine:
         epidemic = None if scn is None else scn.epidemic
         init_mask = jnp.asarray(self.scenario_schedule.init_mask)
         fail_prob = float(cfg.fail_prob)
-        # stateless streams for beyond-horizon draws: fold_in on the
-        # pass index (and plane) means chained runs need no RNG carry
-        base_key = jax.random.key(np.uint32(cfg.seed))
-        fail_key = jax.random.fold_in(base_key, 1)
-        spread_key = jax.random.fold_in(base_key, 2)
-        noise_key = jax.random.fold_in(base_key, 3)
+        fail_key = self._fail_key
+        spread_key = self._spread_key
+        noise_key = self._noise_key
 
         def corrupt_params(new_tree, old_tree, lie, plane, k, salt):
             """Byzantine injection at the pass kernel: where ``lie``,
@@ -366,12 +385,13 @@ class FleetEngine:
                 out.append(jnp.where(lie, bad, new))
             return jax.tree.unflatten(treedef, out)
 
-        def closed_loop(state, energy, failed, ttl, bidx, k, plan,
+        def closed_loop(state, energy, failed, ttl, bidx, k, ring, plan,
                         fail_mask, spread, byz):
-            self.traces += 1        # side effect fires at trace time
+            # side effect fires at trace time
+            self.metrics.inc("traces")
 
             def plane_pass(plane, fail_k, spread_k, byz_row, state,
-                           energy, failed, ttl, bidx, plan, k):
+                           energy, failed, ttl, bidx, ring, plan, k):
                 # epidemic dynamics first: faults spread along the slot
                 # ring gated by the precomputed prefix draws, or by
                 # in-scan jax.random draws beyond the horizon — chained
@@ -466,13 +486,26 @@ class FleetEngine:
                                         jnp.nan),
                     n_steps=n_valid,
                     n_infected=faulted_m.sum().astype(jnp.int32))
-                return (state, energy, failed, ttl, bidx), telem
+                # flight recorder: one EV_PASS per (plane, pass) into
+                # this plane's ring (t is the absolute pass index, so
+                # chained runs land on one timeline with no rebasing)
+                ring = ring_record(
+                    ring, EV_PASS, k, telem.sat,
+                    (action.astype(jnp.float32), telem.battery_j, loss,
+                     n_valid.astype(jnp.float32),
+                     plan.kept_fraction[slot],
+                     (fail | fault).astype(jnp.float32),
+                     (jnp.float32(1.0) if sunlit is None
+                      else sunlit.astype(jnp.float32)),
+                     faulted_m.sum().astype(jnp.float32)))
+                return (state, energy, failed, ttl, bidx, ring), telem
 
-            vpass = jax.vmap(plane_pass,
-                             in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))
+            vpass = jax.vmap(
+                plane_pass,
+                in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))
 
             def pass_body(carry, _):
-                state, energy, failed, ttl, bidx, k = carry
+                state, energy, failed, ttl, bidx, k, ring = carry
                 # scheduled failures fire inside the precomputed prefix
                 # (bit-parity with the host oracle); beyond it the
                 # stream refreshes from jax.random so chained runs keep
@@ -486,15 +519,16 @@ class FleetEngine:
                     fail_k = fail_k | (live & (k >= horizon))
                 spread_k = jnp.take(
                     spread, jnp.minimum(k, spread.shape[1] - 1), axis=1)
-                (state, energy, failed, ttl, bidx), telem = vpass(
+                (state, energy, failed, ttl, bidx, ring), telem = vpass(
                     plane_ids, fail_k, spread_k, byz, state, energy,
-                    failed, ttl, bidx, plan, k)
-                return (state, energy, failed, ttl, bidx, k + 1), telem
+                    failed, ttl, bidx, ring, plan, k)
+                return (state, energy, failed, ttl, bidx, k + 1,
+                        ring), telem
 
             def rev_body(carry, _):
                 carry, telem = jax.lax.scan(pass_body, carry, None,
                                             length=L)
-                state, energy, failed, ttl, bidx, k = carry
+                state, energy, failed, ttl, bidx, k, ring = carry
                 if avg_every > 0 and P > 1:
                     # inter-plane ISL exchange at the revolution
                     # boundary — robust modes (median / trimmed_mean)
@@ -503,14 +537,17 @@ class FleetEngine:
                     state = jax.tree.map(
                         lambda a, o: jnp.where(do, a, o),
                         aggregate_planes(state, cfg.aggregate), state)
-                return (state, energy, failed, ttl, bidx, k), telem
+                    ring = jax.vmap(
+                        lambda r: ring_record(r, EV_EXCHANGE, k, -1,
+                                              (1.0,), mask=do))(ring)
+                return (state, energy, failed, ttl, bidx, k, ring), telem
 
             carry, telem = jax.lax.scan(
-                rev_body, (state, energy, failed, ttl, bidx, k), None,
-                length=n_revolutions)
+                rev_body, (state, energy, failed, ttl, bidx, k, ring),
+                None, length=n_revolutions)
             return carry + (telem,)
 
-        fn = jax.jit(closed_loop, donate_argnums=(0, 1, 2, 3, 4))
+        fn = jax.jit(closed_loop, donate_argnums=(0, 1, 2, 3, 4, 6))
         self._fns[n_revolutions] = fn
         return fn
 
@@ -535,18 +572,30 @@ class FleetEngine:
         ttl, bidx, k = self._ttl, self._batch_idx, self._pass_idx
 
         chunks = []
-        fn = self._compiled(1 if stream_telemetry else R)
+        r_chunk = 1 if stream_telemetry else R
+        fn = self._compiled(r_chunk)
+        # ring capacity: L passes + at most one exchange marker per
+        # revolution, per plane — nothing ever drops
+        ring_cap = r_chunk * (self.rev_len + 1)
         for _ in range(R if stream_telemetry else 1):
-            state, energy, failed, ttl, bidx, k, telem = fn(
-                state, energy, failed, ttl, bidx, k, self.plan,
+            ring = jax.device_put(
+                ring_init(ring_cap, batch=(self.n_planes,)), self._shard)
+            t0 = time.perf_counter()
+            state, energy, failed, ttl, bidx, k, ring, telem = fn(
+                state, energy, failed, ttl, bidx, k, ring, self.plan,
                 self._fail_mask, self._spread, self._byz)
             # commit the carry per dispatch: an interrupted streaming
             # study keeps every completed revolution and stays chainable
             self.state, self.energy, self._failed = state, energy, failed
             self._ttl, self._batch_idx, self._pass_idx = ttl, bidx, k
-            self.device_calls += 1
+            self.metrics.inc("device_calls")
             chunks.append(jax.tree.map(np.asarray, telem))  # the ONE sync
-            self.host_syncs += 1
+            self.metrics.inc("host_syncs")
+            self.metrics.histogram("dispatch_s").record(
+                time.perf_counter() - t0)
+            # ring flush rides the same sync boundary — no extra sync
+            # (events carry absolute pass indices, no rebasing needed)
+            self.recorder.ingest(ring)
 
         telem = jax.tree.map(lambda *xs: np.concatenate(xs), *chunks)
         # (R, L, P) -> (P, R*L): plane-major per-pass timelines

@@ -1,0 +1,237 @@
+"""``python -m repro.obs``: flight-recorder smoke + timeline render CLI.
+
+Default (no args) runs the record→flush→render smoke exercised by
+``scripts/check.sh --fast``:
+
+1. a 2-plane × 8-sat degraded fleet run (eclipse + epidemic) under a
+   :func:`~repro.obs.metrics.sync_budget` guard, asserting every pass
+   produced exactly one ring event whose payload matches the dense
+   telemetry bit for bit;
+2. a delegated ``ConstellationSim.run(engine="device")`` asserting the
+   recorder event count matches the host-facing ``PassRecord`` list;
+3. a serve-fleet run asserting one ``EV_SERVE`` event per
+   (plane, window);
+4. a merged Chrome-trace render, structurally validated.
+
+``python -m repro.obs render`` runs a fresh fleet (optionally with the
+degraded scenario and/or a concurrent serve fleet) and writes the
+Perfetto/Chrome-trace JSON — the acceptance path is::
+
+    python -m repro.obs render --planes 4 --sats 256 \\
+        --scenario degraded --serve --out trace.json
+
+Env knobs for the smoke (small-machine CI): ``REPRO_OBS_SMOKE_SATS``
+(default 8), ``REPRO_OBS_SMOKE_PLANES`` (2), ``REPRO_OBS_SMOKE_REVS``
+(2).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _fleet_engine(n_planes: int, n_sats: int, n_revolutions: int,
+                  scenario: str, seed: int = 0):
+    from repro.core.energy import PassBudget
+    from repro.core.orbits import OrbitalPlane
+    from repro.core.sl_step import autoencoder_adapter
+    from repro.fleet.engine import FleetConfig, FleetEngine
+    from repro.fleet.scenarios import (EclipseConfig, EpidemicConfig,
+                                       ScenarioConfig)
+    from repro.sim.data import DeviceImageryShards
+
+    scn = None
+    if scenario == "degraded":
+        scn = ScenarioConfig(
+            eclipse=EclipseConfig(period=4, duty=0.5, stagger=1),
+            epidemic=EpidemicConfig(beta=0.6, ttl=2, init_slots=(0,),
+                                    start=0))
+    cfg = FleetConfig(
+        n_planes=n_planes, n_revolutions=n_revolutions,
+        battery_j=200.0, recharge_w=0.02, reserve_j=180.0,
+        max_steps_per_pass=2, seed=seed, avg_every=1, scenario=scn,
+        aggregate="median" if scn is not None and n_planes > 1 else "mean")
+    return FleetEngine(autoencoder_adapter(cut=5, img=32),
+                       PassBudget(plane=OrbitalPlane(n_sats=n_sats),
+                                  n_items=4e6),
+                       DeviceImageryShards(img=32, batch=4), cfg)
+
+
+def _serve_engine(n_planes: int, n_sats: int, n_windows: int,
+                  seed: int = 2):
+    from repro.fleet.scenarios import EclipseConfig
+    from repro.serve_fleet.engine import (FleetServeEngine, ServeCost,
+                                          ServeFleetConfig, TrainLoad)
+    from repro.serve_fleet.traffic import TrafficConfig
+
+    cost = ServeCost(tokens_per_s=400.0, e_token_j=0.05,
+                     dtx_bits_token=16_384.0)
+    scfg = ServeFleetConfig(
+        n_planes=n_planes, n_sats=n_sats, n_windows=n_windows,
+        battery_j=60.0, recharge_w=0.02, reserve_serve_j=5.0,
+        reserve_train_j=30.0, eclipse=EclipseConfig(period=6, duty=0.5),
+        window_s=90.0)
+    train = TrainLoad(drain_j=8.0, e_total_j=12.0)
+    return FleetServeEngine(scfg, TrafficConfig(users_per_day=60_000.0,
+                                                decode_len=4, seed=seed),
+                            cost, train=train)
+
+
+def _smoke() -> None:
+    import numpy as np
+
+    from repro.obs.metrics import sync_budget
+    from repro.obs.ring import EV_EXCHANGE, EV_PASS, EV_SERVE, merge_events
+    from repro.obs.timeline import (timeline_summary, validate_chrome_trace,
+                                    write_chrome_trace)
+
+    n_sats = int(os.environ.get("REPRO_OBS_SMOKE_SATS", "8"))
+    n_planes = int(os.environ.get("REPRO_OBS_SMOKE_PLANES", "2"))
+    n_revs = int(os.environ.get("REPRO_OBS_SMOKE_REVS", "2"))
+    t0 = time.time()
+
+    # -- 1. degraded fleet run under a sync budget ------------------------
+    fleet = _fleet_engine(n_planes, n_sats, n_revs, "degraded")
+    with sync_budget(n_revs, registry=fleet.metrics):
+        res = fleet.run(stream_telemetry=True)
+    ev = fleet.recorder.events()
+    n_pass = int((ev["kind"] == EV_PASS).sum())
+    assert n_pass == res.action.size, (n_pass, res.action.shape)
+    assert fleet.recorder.dropped == 0
+    # payload actions must match the dense telemetry bit for bit
+    for p in range(n_planes):
+        sel = (ev["kind"] == EV_PASS) & (ev["plane"] == p)
+        order = np.argsort(ev["t"][sel])
+        np.testing.assert_array_equal(
+            ev["payload"][sel][order][:, 0].astype(np.int32),
+            res.action[p])
+    n_exch = int((ev["kind"] == EV_EXCHANGE).sum())
+    print(f"[obs] fleet {n_planes}x{n_sats}x{n_revs}: {n_pass} pass "
+          f"events + {n_exch} exchange markers, payload==telemetry, "
+          f"host_syncs={fleet.host_syncs}<= {n_revs} ({time.time() - t0:.1f}s)")
+
+    # -- 2. delegated sim run: events must match PassRecords --------------
+    t1 = time.time()
+    from repro.core.constellation import (ConstellationConfig,
+                                          ConstellationSim)
+    from repro.core.energy import PassBudget
+    from repro.core.orbits import OrbitalPlane
+    from repro.core.sl_step import autoencoder_adapter
+    from repro.sim.data import DeviceImageryShards
+
+    sim = ConstellationSim(
+        autoencoder_adapter(cut=5, img=32),
+        PassBudget(plane=OrbitalPlane(n_sats=4), n_items=4e6),
+        DeviceImageryShards(img=32, batch=4),
+        ConstellationConfig(n_passes=8, batch_size=4, battery_j=200.0,
+                            recharge_w=0.01, reserve_j=150.0,
+                            max_steps_per_pass=4))
+    sim.run(engine="device")
+    eng = sim.device_engine
+    assert len(eng.recorder) == len(sim.records), \
+        (len(eng.recorder), len(sim.records))
+    sim_ev = eng.recorder.events()
+    from repro.sim.device_sim import ACTION_NAMES
+    code = {v: k for k, v in ACTION_NAMES.items()}
+    rec_act = np.array([code[r.action] for r in sim.records], np.int32)
+    np.testing.assert_array_equal(
+        sim_ev["payload"][:, 0].astype(np.int32), rec_act)
+    print(f"[obs] delegated sim: {len(eng.recorder)} events == "
+          f"{len(sim.records)} PassRecords ({time.time() - t1:.1f}s)")
+
+    # -- 3. serve fleet: one EV_SERVE per (plane, window) -----------------
+    t2 = time.time()
+    serve = _serve_engine(n_planes, n_sats, n_windows=24)
+    with sync_budget(1, registry=serve.metrics):
+        sres = serve.run()
+    sev = serve.recorder.events()
+    n_serve = int((sev["kind"] == EV_SERVE).sum())
+    assert n_serve == sres.arrivals.size, (n_serve, sres.arrivals.shape)
+    print(f"[obs] serve fleet: {n_serve} serve events == "
+          f"{sres.arrivals.size} windows ({time.time() - t2:.1f}s)")
+
+    # -- 4. merged render -------------------------------------------------
+    import tempfile
+    merged = merge_events(ev, sev)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "trace.json")
+        write_chrome_trace(path, merged, window_s=90.0)
+        with open(path) as fh:
+            validate_chrome_trace(json.load(fh))
+    print(timeline_summary(merged))
+    print(f"[obs] smoke OK: render valid ({time.time() - t0:.1f}s total)")
+
+
+def _render(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs render",
+        description="run a fleet (optionally + serving) and write the "
+                    "mission timeline as Chrome-trace/Perfetto JSON")
+    ap.add_argument("--planes", type=int, default=2)
+    ap.add_argument("--sats", type=int, default=8)
+    ap.add_argument("--revolutions", type=int, default=1)
+    ap.add_argument("--windows", type=int, default=24,
+                    help="serve windows (with --serve)")
+    ap.add_argument("--scenario", choices=("none", "degraded"),
+                    default="none")
+    ap.add_argument("--serve", action="store_true",
+                    help="also run a serve fleet on the same plane "
+                         "layout and merge its windows into the trace")
+    ap.add_argument("--window-s", type=float, default=90.0,
+                    help="seconds of trace time per pass/window index")
+    ap.add_argument("--out", default="trace.json")
+    ap.add_argument("--events", default=None,
+                    help="also save the raw event table (.npz)")
+    args = ap.parse_args(argv)
+
+    from repro.obs.ring import merge_events
+    from repro.obs.timeline import (timeline_summary, validate_chrome_trace,
+                                    write_chrome_trace)
+
+    t0 = time.time()
+    fleet = _fleet_engine(args.planes, args.sats, args.revolutions,
+                          args.scenario)
+    fleet.run()
+    tables = [fleet.recorder.events()]
+    recorders = [fleet.recorder]
+    print(f"[render] fleet {args.planes}x{args.sats}x{args.revolutions} "
+          f"({args.scenario}): {len(fleet.recorder)} events, "
+          f"host_syncs={fleet.host_syncs} ({time.time() - t0:.1f}s)")
+    if args.serve:
+        t1 = time.time()
+        serve = _serve_engine(args.planes, args.sats, args.windows)
+        serve.run()
+        tables.append(serve.recorder.events())
+        recorders.append(serve.recorder)
+        print(f"[render] serve fleet {args.planes}x{args.sats}, "
+              f"{args.windows} windows: {len(serve.recorder)} events "
+              f"({time.time() - t1:.1f}s)")
+
+    merged = merge_events(*tables)
+    trace = write_chrome_trace(args.out, merged, window_s=args.window_s)
+    validate_chrome_trace(trace)
+    assert sum(r.dropped for r in recorders) == 0
+    if args.events:
+        import numpy as np
+        np.savez(args.events, dropped=np.int64(0), **merged)
+        print(f"[render] event table -> {args.events}")
+    print(timeline_summary(merged))
+    print(f"[render] {len(trace['traceEvents'])} trace events -> "
+          f"{args.out} (open in ui.perfetto.dev or chrome://tracing)")
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv and argv[0] == "render":
+        _render(argv[1:])
+    elif not argv:
+        _smoke()
+    else:
+        raise SystemExit("usage: python -m repro.obs [render ...]")
+
+
+if __name__ == "__main__":
+    main()

@@ -47,6 +47,10 @@ from repro.core.energy import PassBudget, clamp_battery
 from repro.core.orbits import OrbitalPlane, PAPER_PLANE
 from repro.fleet.scenarios import EclipseConfig
 from repro.models import lm
+from repro.obs.metrics import (MetricsRegistry, counter_property,
+                               global_registry)
+from repro.obs.ring import (EV_SERVE, FlightRecorder,
+                            record as ring_record, ring_init)
 from repro.serve.engine import DecodeEngine, Request
 from repro.serve_fleet import router
 from repro.serve_fleet.traffic import PassWindowTraffic, TrafficConfig
@@ -307,9 +311,16 @@ class FleetServeEngine:
     for the optional concurrent :class:`TrainLoad` (reserve-skip reads
     the post-serve battery: that is the contention), eclipse-gated
     ``recharge`` last.  ``traces`` / ``device_calls`` / ``host_syncs``
-    count as in the sim/fleet engines: one trace per distinct window
-    count, one host sync per run.
+    count as in the sim/fleet engines (registry-backed, namespace
+    ``serve_fleet``): one trace per distinct window count, one host
+    sync per run.  Every window also records an ``EV_SERVE`` event into
+    a per-plane :class:`~repro.obs.ring.TelemetryRing` on the carry,
+    flushed into ``self.recorder`` at that same sync.
     """
+
+    traces = counter_property("traces")
+    device_calls = counter_property("device_calls")
+    host_syncs = counter_property("host_syncs")
 
     def __init__(self, cfg: ServeFleetConfig, traffic: TrafficConfig,
                  cost: ServeCost, *, train: Optional[TrainLoad] = None):
@@ -326,9 +337,11 @@ class FleetServeEngine:
             passes_skipped=jnp.zeros((P, M), jnp.int32))
         self.backlog = jnp.zeros((P,), jnp.float32)
         self.k = 0
-        self.traces = 0
-        self.device_calls = 0
-        self.host_syncs = 0
+        self.metrics = MetricsRegistry("serve_fleet",
+                                       parent=global_registry())
+        self.metrics.gauge("n_planes").set(P)
+        self.metrics.gauge("n_sats").set(M)
+        self.recorder = FlightRecorder(self.metrics)
         self._fns: Dict[int, Any] = {}
         # f32 constants shared verbatim with the host oracle
         self._c = serve_constants(cfg, self.traffic, cost, train)
@@ -344,10 +357,11 @@ class FleetServeEngine:
         plane_ids = jnp.arange(P, dtype=jnp.int32)
         member = jnp.ones((M,), bool)     # static ring: everyone alive
 
-        def closed_loop(backlog, energy, k0, arrivals):
-            self.traces += 1              # side effect fires at trace time
+        def closed_loop(backlog, energy, k0, ring, arrivals):
+            # side effect fires at trace time
+            self.metrics.inc("traces")
 
-            def plane_window(plane, backlog_p, energy_p, k, a_i):
+            def plane_window(plane, backlog_p, energy_p, ring_p, k, a_i):
                 slot = router.serving_slot(member, k, xp=jnp)
                 serve_ok = energy_p.battery_j[slot] >= c["reserve_serve"]
                 served, backlog_p = router.drain_queue(
@@ -377,21 +391,31 @@ class FleetServeEngine:
                     arrivals=a_i, served=served, backlog=backlog_p,
                     tokens=tokens, battery_j=energy_p.battery_j[slot],
                     slot=slot, trained=trained_i)
-                return backlog_p, energy_p, telem
+                # flight recorder: one EV_SERVE per (plane, window),
+                # absolute window index k
+                ring_p = ring_record(
+                    ring_p, EV_SERVE, k, slot,
+                    (a_i.astype(jnp.float32), telem.battery_j,
+                     served, backlog_p, tokens,
+                     trained_i.astype(jnp.float32),
+                     (jnp.float32(1.0) if sunlit is None
+                      else sunlit.astype(jnp.float32)),
+                     c["cap_req"]))
+                return backlog_p, energy_p, ring_p, telem
 
-            vwin = jax.vmap(plane_window, in_axes=(0, 0, 0, None, 0))
+            vwin = jax.vmap(plane_window, in_axes=(0, 0, 0, 0, None, 0))
 
             def body(carry, a_k):
-                backlog, energy, k = carry
-                backlog, energy, telem = vwin(plane_ids, backlog,
-                                              energy, k, a_k)
-                return (backlog, energy, k + 1), telem
+                backlog, energy, k, ring = carry
+                backlog, energy, ring, telem = vwin(plane_ids, backlog,
+                                                    energy, ring, k, a_k)
+                return (backlog, energy, k + 1, ring), telem
 
-            (backlog, energy, k), telem = jax.lax.scan(
-                body, (backlog, energy, k0), arrivals)
-            return backlog, energy, k, telem
+            (backlog, energy, k, ring), telem = jax.lax.scan(
+                body, (backlog, energy, k0, ring), arrivals)
+            return backlog, energy, k, ring, telem
 
-        fn = jax.jit(closed_loop, donate_argnums=(0, 1))
+        fn = jax.jit(closed_loop, donate_argnums=(0, 1, 3))
         self._fns[n_windows] = fn
         return fn
 
@@ -406,13 +430,19 @@ class FleetServeEngine:
         # bit-identical array
         arrivals = jnp.asarray(
             self.traffic.realize(K, start=self.k).T)   # (K, P) scan xs
+        # one EV_SERVE per (plane, window): capacity K per plane's ring
+        ring = ring_init(K, batch=(self.cfg.n_planes,))
         t0 = time.perf_counter()
-        self.device_calls += 1
-        backlog, energy, k, telem = fn(self.backlog, self.energy,
-                                       jnp.int32(self.k), arrivals)
+        self.metrics.inc("device_calls")
+        backlog, energy, k, ring, telem = fn(self.backlog, self.energy,
+                                             jnp.int32(self.k), ring,
+                                             arrivals)
         telem = jax.tree.map(np.asarray, telem)        # ONE host sync
-        self.host_syncs += 1
+        self.metrics.inc("host_syncs")
         dt = time.perf_counter() - t0
+        self.metrics.histogram("dispatch_s").record(dt)
+        # ring flush rides the same sync boundary — no extra sync
+        self.recorder.ingest(ring)
         self.backlog, self.energy, self.k = backlog, energy, int(k)
         host = jax.tree.map(np.asarray, energy)
         # scan stacks (K, P); results read (P, K)

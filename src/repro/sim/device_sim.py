@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, Dict, NamedTuple, Optional, Union
 
 import jax
@@ -56,6 +57,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import PassBudget, SplitCosts
+from repro.obs.metrics import (MetricsRegistry, counter_property,
+                               global_registry)
+from repro.obs.ring import (EV_PASS, FlightRecorder, TelemetryRing,
+                            record as ring_record, ring_init)
 from repro.core.sl_step import (SplitAdapter, boundary_bits,
                                 dedupe_state_buffers, make_pass_step)
 from repro.core.train_state import SLTrainState
@@ -291,12 +296,22 @@ class DeviceConstellationSim:
     the input is consumed); ``plan`` overrides on-device planning with
     an external :class:`DevicePassPlan` (e.g. a swept grid cell).
 
-    Observability counters: ``traces`` (jit traces of the closed loop —
-    stays at 1 across repeated runs of the same shape), ``device_calls``
+    Observability: every pass also records an ``EV_PASS`` event into a
+    :class:`~repro.obs.ring.TelemetryRing` riding the scan carry,
+    flushed into ``self.recorder`` at the existing telemetry sync — the
+    flight-recorder feed of :mod:`repro.obs.timeline`.  The legacy
+    counters ``traces`` (jit traces of the closed loop — stays at 1
+    across repeated runs of the same shape), ``device_calls``
     (dispatches; one per run, or one per revolution when streaming) and
     ``host_syncs`` (telemetry device→host reads; ≤ 1 per revolution by
-    construction).
+    construction) live on ``self.metrics`` (a
+    :class:`~repro.obs.metrics.MetricsRegistry` under the ``sim``
+    namespace) behind read-through properties.
     """
+
+    traces = counter_property("traces")
+    device_calls = counter_property("device_calls")
+    host_syncs = counter_property("host_syncs")
 
     def __init__(self, adapter: SplitAdapter, budget: PassBudget,
                  batch_fn: Callable[[Any, Any], Dict],
@@ -340,9 +355,10 @@ class DeviceConstellationSim:
             quantize_boundary=cfg.quantize_boundary)
         self._batch_idx = jnp.zeros((), jnp.int32)
         self._fns: Dict[int, Any] = {}
-        self.traces = 0
-        self.device_calls = 0
-        self.host_syncs = 0
+        self.metrics = MetricsRegistry("sim", parent=global_registry())
+        self.metrics.gauge("n_sats").set(self.n_sats)
+        self.recorder = FlightRecorder(self.metrics)
+        self._passes_done = 0      # absolute pass count across chained runs
 
     # ------------------------------------------------------- the program
     def _compiled(self, n_revolutions: int):
@@ -363,7 +379,7 @@ class DeviceConstellationSim:
         step_ids = jnp.arange(K, dtype=jnp.int32)
 
         def pass_body(carry, sat):
-            state, energy, bidx, plan = carry
+            state, energy, bidx, ring, plan = carry
             # energy policy first, exactly like the host scheduler: below
             # reserve => the whole pass is a masked no-op (the segment
             # still "moves on" — it's the carry)
@@ -392,21 +408,31 @@ class DeviceConstellationSim:
             telem = PassTelemetry(action=action, loss=loss,
                                   battery_j=energy.battery_j[sat],
                                   n_steps=n_valid)
-            return (state, energy, bidx, plan), telem
+            # flight recorder: one EV_PASS per pass; the ring's own
+            # cursor IS the dispatch-local pass index (every pass
+            # records exactly once), rebased to the run timeline by
+            # the host at ingest
+            ring = ring_record(
+                ring, EV_PASS, ring.cursor, sat,
+                (action.astype(jnp.float32), energy.battery_j[sat], loss,
+                 n_valid.astype(jnp.float32), plan.kept_fraction[sat],
+                 0.0, 1.0, 0.0))
+            return (state, energy, bidx, ring, plan), telem
 
         def rev_body(carry, _):
             return jax.lax.scan(pass_body, carry,
                                 jnp.arange(N, dtype=jnp.int32))
 
-        def closed_loop(state, energy, bidx, plan):
-            self.traces += 1            # side effect fires at trace time
+        def closed_loop(state, energy, bidx, ring, plan):
+            # side effect fires at trace time
+            self.metrics.inc("traces")
             carry, telem = jax.lax.scan(rev_body,
-                                        (state, energy, bidx, plan),
+                                        (state, energy, bidx, ring, plan),
                                         None, length=n_revolutions)
-            state, energy, bidx, _ = carry
-            return state, energy, bidx, telem
+            state, energy, bidx, ring, _ = carry
+            return state, energy, bidx, ring, telem
 
-        fn = jax.jit(closed_loop, donate_argnums=(0, 1))
+        fn = jax.jit(closed_loop, donate_argnums=(0, 1, 3))
         self._fns[n_revolutions] = fn
         return fn
 
@@ -429,15 +455,26 @@ class DeviceConstellationSim:
         energy, bidx = self.energy, self._batch_idx
 
         chunks = []
-        fn = self._compiled(1 if stream_telemetry else R)
+        r_chunk = 1 if stream_telemetry else R
+        fn = self._compiled(r_chunk)
         for _ in range(R if stream_telemetry else 1):
-            state, energy, bidx, telem = fn(state, energy, bidx, self.plan)
+            # the ring is donated with the carry: a fresh (empty) one
+            # per dispatch, flushed whole at the telemetry sync below
+            ring = ring_init(r_chunk * self.n_sats)
+            t0 = time.perf_counter()
+            state, energy, bidx, ring, telem = fn(state, energy, bidx,
+                                                  ring, self.plan)
             # commit the carry per dispatch: an interrupted streaming
             # study keeps every completed revolution and stays chainable
             self.state, self.energy, self._batch_idx = state, energy, bidx
-            self.device_calls += 1
+            self.metrics.inc("device_calls")
             chunks.append(jax.tree.map(np.asarray, telem))   # the ONE sync
-            self.host_syncs += 1
+            self.metrics.inc("host_syncs")
+            self.metrics.histogram("dispatch_s").record(
+                time.perf_counter() - t0)
+            # ring flush rides the same sync boundary — no extra sync
+            self.recorder.ingest(ring, t_offset=self._passes_done)
+            self._passes_done += r_chunk * self.n_sats
 
         telem = jax.tree.map(lambda *xs: np.concatenate(xs), *chunks)
         return DeviceSimResult(
