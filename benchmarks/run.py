@@ -616,6 +616,114 @@ def degraded_ops_benchmarks(quick: bool = False):
     return out
 
 
+def isl_frontier_benchmarks(quick: bool = False):
+    """ISL exchange frontier (``repro.isl``): what compressed,
+    bandwidth-limited inter-plane exchange buys and costs.
+
+    Sweeps the codec grid {none, int8, top-k 10%, top-k 1%} across both
+    exchange modes on a 2x16 fleet, entirely on device: ``sync`` is the
+    revolution-boundary aggregation routed through the codec + meter
+    (``none`` = the metered legacy barrier), ``async`` is contact-window
+    gossip with staleness-discounted merges and no barrier at all.
+    Each row reports the final loss, the actual wire bits / ISL joules
+    drained from the batteries, and the *planned* per-pass
+    ``d_isl_bits`` — the problem-(13) feedback that makes compression a
+    resource-allocation decision rather than a counter.
+
+    Asserts the acceptance frontier: (a) async top-k 1% lands within
+    50% of the full-float sync barrier's final loss; (b) wire bits
+    shrink monotonically with compression in both modes; (c) the
+    planned allocation differs between compression levels.
+    """
+    import numpy as np
+    from repro.core.energy import PassBudget
+    from repro.core.orbits import OrbitalPlane
+    from repro.core.sl_step import autoencoder_adapter
+    from repro.fleet import FleetConfig, FleetEngine
+    from repro.isl import (CodecConfig, ContactConfig, ExchangeConfig,
+                           codec_label)
+    from repro.sim.data import DeviceImageryShards
+
+    P, N = 2, 16
+    R = 2 if quick else 6
+    print(f"== isl exchange frontier (codec x mode, {P}x{N} fleet) ==")
+    print("name,us_per_call,derived")
+    out = {}
+    shards = DeviceImageryShards(img=32, batch=4)
+    adapter = autoencoder_adapter(cut=5, img=32)
+    budget = PassBudget(plane=OrbitalPlane(n_sats=N), n_items=4e6)
+    codecs = [CodecConfig("none"), CodecConfig("int8"),
+              CodecConfig("topk", topk_ratio=0.10),
+              CodecConfig("topk", topk_ratio=0.01)]
+
+    def final_loss(res):
+        last = [row[np.isfinite(row)][-1] for row in res.loss]
+        return float(np.mean(last))
+
+    rows = {}
+    for mode in ("sync", "async"):
+        for codec in codecs:
+            if mode == "sync":
+                cfg = FleetConfig(
+                    n_planes=P, n_revolutions=R, max_steps_per_pass=2,
+                    seed=0, avg_every=1,
+                    exchange=ExchangeConfig(mode="sync", codec=codec))
+            else:
+                cfg = FleetConfig(
+                    n_planes=P, n_revolutions=R, max_steps_per_pass=2,
+                    seed=0, avg_every=0,
+                    exchange=ExchangeConfig(
+                        mode="async", codec=codec,
+                        contact=ContactConfig(period=2), mix=0.5,
+                        staleness_lam=0.1))
+
+            def frontier_run(cfg=cfg):
+                eng = FleetEngine(adapter, budget, shards, cfg)
+                return eng, eng.run()
+
+            us, (eng, res) = _timeit(frontier_run, n=1, warmup=0)
+            s = res.summary()
+            row = dict(
+                us=us, n_passes=P * R * N, final_loss=final_loss(res),
+                isl_bits=float(s["ISL_exchange_bits"]),
+                isl_j=float(s["ISL_exchange_J"]),
+                contacts=int(np.asarray(res.isl_contacts).sum()),
+                plan_d_isl_bits=float(
+                    np.asarray(eng.plan.d_isl_bits).mean()),
+                host_syncs=eng.host_syncs)
+            rows[(mode, codec_label(codec))] = row
+            name = f"isl_frontier_{mode}_{codec_label(codec)}"
+            out[name] = row
+            print(f"{name},{us:.0f},loss={row['final_loss']:.4g},"
+                  f"bits={row['isl_bits']:.3g},"
+                  f"isl_J={row['isl_j']:.3g},"
+                  f"plan_d_isl={row['plan_d_isl_bits']:.4g}")
+
+    # -- the acceptance frontier ------------------------------------------
+    order = ("none", "int8", "topk10pc", "topk1pc")
+    for mode in ("sync", "async"):
+        bits = [rows[(mode, c)]["isl_bits"] for c in order]
+        assert bits == sorted(bits, reverse=True) and bits[-1] > 0, (
+            "wire bits must shrink monotonically with compression",
+            mode, dict(zip(order, bits)))
+        plans = [rows[(mode, c)]["plan_d_isl_bits"] for c in order]
+        assert len(set(plans)) == len(plans), (
+            "planned d_isl_bits must differ between compression levels",
+            mode, dict(zip(order, plans)))
+    ref = rows[("sync", "none")]["final_loss"]
+    got = rows[("async", "topk1pc")]["final_loss"]
+    gap = abs(got - ref) / ref
+    assert gap <= 0.5, (
+        "async top-k 1% must land within 50% of the full-float sync "
+        "barrier", got, ref)
+    out["isl_frontier_acceptance"] = dict(
+        sync_none_loss=ref, async_topk1pc_loss=got, rel_gap=gap,
+        tolerance=0.5, bits_monotone=True, plans_differ=True)
+    print(f"isl_frontier_acceptance,-,async-topk1pc-gap={gap * 100:.1f}%"
+          f"-of-sync-full-float,bits-monotone,plans-differ")
+    return out
+
+
 def serve_fleet_benchmarks(quick: bool = False):
     """Serving-fleet rows (``repro.serve_fleet``): the constellation as
     an inference fleet.
@@ -914,6 +1022,7 @@ def main(argv=None) -> None:
     section("device_sim", device_sim_benchmarks, quick=args.quick)
     section("fleet", fleet_benchmarks, quick=args.quick)
     section("degraded_ops", degraded_ops_benchmarks, quick=args.quick)
+    section("isl_frontier", isl_frontier_benchmarks, quick=args.quick)
     section("serve_fleet", serve_fleet_benchmarks, quick=args.quick)
     section("micro", micro_benchmarks)
     errored = sorted(k for k, v in results.items()

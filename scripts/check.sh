@@ -44,6 +44,12 @@ else
     # energy parity on the shared train/serve batteries)
     echo "== serve-fleet smoke (split decode + pass-window serving) =="
     python -m repro.serve_fleet
+    # ISL comms smoke: codec bit-metering monotonicity, sync/none ==
+    # legacy barrier bit-for-bit, async compressed gossip vs the NumPy
+    # host-prefix oracles (actions + every contact row), <= 1 host
+    # sync per revolution -- on the forced 2-CPU-device mesh
+    echo "== isl smoke (contact-window exchange vs host oracles) =="
+    python -m repro.isl
     # flight-recorder smoke: record->flush->render a degraded fleet run
     # + delegated sim + serve fleet under a sync_budget guard; event
     # counts and payloads must match the dense telemetry, and the

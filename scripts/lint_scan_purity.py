@@ -30,6 +30,12 @@ SCOPES = {
     "src/repro/fleet/engine.py": ("_compiled",),
     "src/repro/serve_fleet/engine.py": ("_compiled",),
     "src/repro/obs/ring.py": ("record",),
+    # the ISL exchange runs inside the fleet's jitted scan
+    "src/repro/isl/exchange.py": ("async_gossip_step", "sync_exchange_step",
+                                  "_charge", "_encode_planes",
+                                  "_tree_where", "staleness_weight"),
+    "src/repro/isl/codec.py": ("encode_delta", "residual_init"),
+    "src/repro/isl/link.py": ("open_at", "contact_index", "offset_at"),
 }
 
 _DEBUG_ATTRS = {"print", "callback", "breakpoint"}

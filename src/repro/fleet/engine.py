@@ -62,6 +62,10 @@ from repro.fleet.events import EventSchedule, build_event_schedule
 from repro.fleet.scenarios import (ScenarioConfig, aggregate_planes,
                                    build_scenario_schedule,
                                    epidemic_step as scn_epidemic_step)
+from repro.isl.codec import delta_payload_bits
+from repro.isl.exchange import (ExchangeConfig, async_gossip_step,
+                                exchange_init, null_exchange_state,
+                                sync_exchange_step)
 from repro.launch.mesh import make_fleet_mesh, plane_sharding
 from repro.sim import energy_state as es_mod
 from repro.sim.device_sim import (ACTION_FAILED, ACTION_FAULT, ACTION_SHED,
@@ -116,6 +120,12 @@ class FleetConfig:
     # inter-plane aggregation: "mean" (parity default) | "median" |
     # "trimmed_mean" — see fleet/scenarios.aggregate_planes
     aggregate: str = "mean"
+    # ---- ISL comms subsystem (repro.isl) ------------------------------
+    # modeled inter-plane exchange: contact windows, compressed deltas,
+    # metered bits/joules charged to the shared batteries and priced
+    # into the problem-(13) plan.  None = the free, instantaneous
+    # legacy barrier above (host-parity default).
+    exchange: Optional[ExchangeConfig] = None
 
 
 class FleetTelemetry(NamedTuple):
@@ -157,6 +167,9 @@ class FleetResult:
     failed: np.ndarray        # (P, M) final failure mask
     fault_ttl: np.ndarray     # (P, M) final epidemic recovery counters
     state: Any                # final SLTrainState, (P, ...) leaves
+    isl_bits: Optional[np.ndarray] = None      # (P,) pushed wire bits
+    isl_e_j: Optional[np.ndarray] = None       # (P,) ISL transmit joules
+    isl_contacts: Optional[np.ndarray] = None  # (P,) successful pushes
 
     def summary(self) -> Dict[str, Any]:
         """Fleet-wide roll-up, same shape as ``ConstellationSim.summary``
@@ -180,6 +193,12 @@ class FleetResult:
             "E_comm_J": float(self.plan.e_comm_j[p_idx, sats].sum()),
             "E_proc_J": float(self.plan.e_proc_j[p_idx, sats].sum()),
             "E_isl_J": float(self.plan.e_isl_j[p_idx, sats].sum()),
+            # measured exchange meter (repro.isl) — 0 when the legacy
+            # free barrier (exchange=None) ran
+            "ISL_exchange_bits": (float(self.isl_bits.sum())
+                                  if self.isl_bits is not None else 0.0),
+            "ISL_exchange_J": (float(self.isl_e_j.sum())
+                               if self.isl_e_j is not None else 0.0),
         }
 
 
@@ -252,6 +271,34 @@ class FleetEngine:
             pa, pb = adapter.init(jax.random.key(cfg.seed))
             state = SLTrainState.create(pa, pb, self.optimizer)
 
+        # ---- ISL exchange statics (repro.isl) --------------------------
+        # wire bits, contact capacity and per-push transmit energy are
+        # shape-static, so they are Python floats baked into the trace;
+        # a payload over the contact capacity disables the exchange
+        # outright (hard bandwidth limit, not a price), and the
+        # amortized per-pass bit volume feeds the problem-(13) planner
+        # below so the codec choice changes the planned allocation
+        exch = cfg.exchange
+        self.exchange = exch
+        self._ex_bits = 0.0
+        self._ex_energy_j = 0.0
+        self._ex_cap_bits = float("inf")
+        self._ex_fits = False
+        isl_extra_bits = 0.0
+        if exch is not None:
+            ptree = (state.params_a, state.params_b)
+            self._ex_bits = delta_payload_bits(ptree, exch.codec)
+            self._ex_cap_bits = exch.contact.capacity_bits(budget.isl,
+                                                           budget.link)
+            self._ex_fits = self._ex_bits <= self._ex_cap_bits
+            if self._ex_fits:
+                self._ex_energy_j = exch.contact.tx_energy_j(
+                    self._ex_bits, budget.isl, budget.link)
+                isl_extra_bits = (self._ex_bits
+                                  * exch.mean_contacts_per_pass(
+                                      self.rev_len, int(cfg.avg_every)))
+        self._ex_on = exch is not None and self._ex_fits and P > 1
+
         # measured costs + plan + scan sizing via the construction block
         # shared with the single-ring engine; all P*M problem-(13)
         # instances shed + solve in ONE device call, with eq. (5)
@@ -263,7 +310,8 @@ class FleetEngine:
                              params_a=state.params_a, n_sats=(P, M),
                              ring_n=budget.plane.n_sats, dtx_bits=dtx_bits,
                              max_steps_per_pass=cfg.max_steps_per_pass,
-                             min_fraction=cfg.min_fraction, plan=plan)
+                             min_fraction=cfg.min_fraction, plan=plan,
+                             isl_extra_bits=isl_extra_bits)
         if tuple(self.plan.n_steps.shape) != (P, M):
             raise ValueError(f"plan shape {self.plan.n_steps.shape} != "
                              f"fleet layout ({P}, {M})")
@@ -308,6 +356,12 @@ class FleetEngine:
         self._spread = put(jnp.asarray(self.scenario_schedule.spread_draw))
         self._byz = put(jnp.asarray(self.scenario_schedule.byz_mask))
         self.plan = put(self.plan)
+        # exchange carry: anchors/residuals/meters ride the scan like
+        # any other state (empty trees when the exchange is off, so the
+        # scan signature never changes shape)
+        self._ex_state = put(
+            exchange_init((self.state.params_a, self.state.params_b), P)
+            if self._ex_on else null_exchange_state(P))
 
         self._pass_step = make_pass_step(
             adapter, self.optimizer,
@@ -361,6 +415,15 @@ class FleetEngine:
         fail_key = self._fail_key
         spread_key = self._spread_key
         noise_key = self._noise_key
+        # ISL exchange statics: an inactive exchange (off / over
+        # capacity / single plane) is dead code, so the program matches
+        # the legacy one exactly
+        exch = self.exchange if self._ex_on else None
+        ex_async = exch is not None and exch.mode == "async"
+        ex_sync = exch is not None and exch.mode == "sync"
+        ex_bits = float(self._ex_bits)
+        ex_e_j = float(self._ex_energy_j)
+        battery_cap = float(cfg.battery_j)
 
         def corrupt_params(new_tree, old_tree, lie, plane, k, salt):
             """Byzantine injection at the pass kernel: where ``lie``,
@@ -385,8 +448,8 @@ class FleetEngine:
                 out.append(jnp.where(lie, bad, new))
             return jax.tree.unflatten(treedef, out)
 
-        def closed_loop(state, energy, failed, ttl, bidx, k, ring, plan,
-                        fail_mask, spread, byz):
+        def closed_loop(state, energy, failed, ttl, bidx, k, ring, ex,
+                        plan, fail_mask, spread, byz):
             # side effect fires at trace time
             self.metrics.inc("traces")
 
@@ -505,7 +568,7 @@ class FleetEngine:
                 in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))
 
             def pass_body(carry, _):
-                state, energy, failed, ttl, bidx, k, ring = carry
+                state, energy, failed, ttl, bidx, k, ring, ex = carry
                 # scheduled failures fire inside the precomputed prefix
                 # (bit-parity with the host oracle); beyond it the
                 # stream refreshes from jax.random so chained runs keep
@@ -522,14 +585,35 @@ class FleetEngine:
                 (state, energy, failed, ttl, bidx, ring), telem = vpass(
                     plane_ids, fail_k, spread_k, byz, state, energy,
                     failed, ttl, bidx, ring, plan, k)
+                if ex_async:
+                    # contact-window gossip (repro.isl): compressed
+                    # delta push + staleness-discounted merge + battery
+                    # charge, every pass the window opens — no barrier
+                    state, ex, energy, ring = async_gossip_step(
+                        exch, state, ex, energy, ring, k, telem.sat,
+                        telem.action, wire_bits=ex_bits, e_push_j=ex_e_j,
+                        battery_cap=battery_cap, n_planes=P,
+                        action_failed=ACTION_FAILED)
                 return (state, energy, failed, ttl, bidx, k + 1,
-                        ring), telem
+                        ring, ex), telem
 
             def rev_body(carry, _):
                 carry, telem = jax.lax.scan(pass_body, carry, None,
                                             length=L)
-                state, energy, failed, ttl, bidx, k, ring = carry
-                if avg_every > 0 and P > 1:
+                state, energy, failed, ttl, bidx, k, ring, ex = carry
+                if ex_sync and avg_every > 0:
+                    # the revolution-boundary exchange, codec'd and
+                    # metered (repro.isl): compressed delta
+                    # reconstructions cross the link, the pushing slot
+                    # pays the transmit energy
+                    do = (k // L) % avg_every == 0
+                    state, ex, energy, ring = sync_exchange_step(
+                        exch, cfg.aggregate, state, ex, energy, ring, k,
+                        telem.sat[-1], telem.action[-1], do,
+                        wire_bits=ex_bits, e_push_j=ex_e_j,
+                        battery_cap=battery_cap, n_planes=P,
+                        action_failed=ACTION_FAILED)
+                elif cfg.exchange is None and avg_every > 0 and P > 1:
                     # inter-plane ISL exchange at the revolution
                     # boundary — robust modes (median / trimmed_mean)
                     # are what survive Byzantine planes
@@ -540,14 +624,16 @@ class FleetEngine:
                     ring = jax.vmap(
                         lambda r: ring_record(r, EV_EXCHANGE, k, -1,
                                               (1.0,), mask=do))(ring)
-                return (state, energy, failed, ttl, bidx, k, ring), telem
+                return (state, energy, failed, ttl, bidx, k, ring,
+                        ex), telem
 
             carry, telem = jax.lax.scan(
-                rev_body, (state, energy, failed, ttl, bidx, k, ring),
+                rev_body,
+                (state, energy, failed, ttl, bidx, k, ring, ex),
                 None, length=n_revolutions)
             return carry + (telem,)
 
-        fn = jax.jit(closed_loop, donate_argnums=(0, 1, 2, 3, 4, 6))
+        fn = jax.jit(closed_loop, donate_argnums=(0, 1, 2, 3, 4, 6, 7))
         self._fns[n_revolutions] = fn
         return fn
 
@@ -570,24 +656,29 @@ class FleetEngine:
         self.state.mark_consumed()
         energy, failed = self.energy, self._failed
         ttl, bidx, k = self._ttl, self._batch_idx, self._pass_idx
+        ex = self._ex_state
 
         chunks = []
         r_chunk = 1 if stream_telemetry else R
         fn = self._compiled(r_chunk)
-        # ring capacity: L passes + at most one exchange marker per
-        # revolution, per plane — nothing ever drops
-        ring_cap = r_chunk * (self.rev_len + 1)
+        # ring capacity: L passes + exchange markers (one per boundary,
+        # or one per contact window when gossiping), per plane —
+        # nothing ever drops
+        n_ex = (self.rev_len // self.exchange.contact.period + 1
+                if self._ex_on and self.exchange.mode == "async" else 1)
+        ring_cap = r_chunk * (self.rev_len + n_ex)
         for _ in range(R if stream_telemetry else 1):
             ring = jax.device_put(
                 ring_init(ring_cap, batch=(self.n_planes,)), self._shard)
             t0 = time.perf_counter()
-            state, energy, failed, ttl, bidx, k, ring, telem = fn(
-                state, energy, failed, ttl, bidx, k, ring, self.plan,
+            state, energy, failed, ttl, bidx, k, ring, ex, telem = fn(
+                state, energy, failed, ttl, bidx, k, ring, ex, self.plan,
                 self._fail_mask, self._spread, self._byz)
             # commit the carry per dispatch: an interrupted streaming
             # study keeps every completed revolution and stays chainable
             self.state, self.energy, self._failed = state, energy, failed
             self._ttl, self._batch_idx, self._pass_idx = ttl, bidx, k
+            self._ex_state = ex
             self.metrics.inc("device_calls")
             chunks.append(jax.tree.map(np.asarray, telem))  # the ONE sync
             self.metrics.inc("host_syncs")
@@ -609,7 +700,9 @@ class FleetEngine:
             plan=DevicePassPlan(*[np.asarray(a) for a in self.plan]),
             energy=EnergyState(*[np.asarray(a) for a in energy]),
             failed=np.asarray(failed), fault_ttl=np.asarray(ttl),
-            state=state)
+            state=state,
+            isl_bits=np.asarray(ex.bits), isl_e_j=np.asarray(ex.e_j),
+            isl_contacts=np.asarray(ex.n_contacts))
 
 
 def _smoke(n_sats: int = 8, n_planes: int = 2,

@@ -306,7 +306,7 @@ def epidemic_oracle(scn: ScenarioConfig, sched: ScenarioSchedule,
     return out
 
 
-def oracle_actions(fleet) -> np.ndarray:
+def oracle_actions(fleet, return_slots: bool = False):
     """Host-prefix parity oracle: the exact ``(P, K)`` ``ACTION_*``
     sequence a fresh :class:`~repro.fleet.engine.FleetEngine` must emit
     over its precomputed horizon.
@@ -315,10 +315,18 @@ def oracle_actions(fleet) -> np.ndarray:
     membership (join/leave/permanent failures), the seeded failure
     stream, epidemic faults (via :func:`epidemic_step` on the same
     precomputed draws), the reserve-skip policy against the planned
-    per-slot drains, and eclipse-gated membership-aware recharge.
+    per-slot drains, eclipse-gated membership-aware recharge, and the
+    ISL exchange's per-push battery charge when the fleet wires a
+    :class:`repro.isl.ExchangeConfig` (an exchange-drained battery
+    reaches the reserve-skip policy on both engines identically).
     Byzantine corruption perturbs losses, never actions, so the oracle
     is exact for every scenario combination.  Call it on a fleet that
     has not run yet (it reads the initial battery/failure state).
+
+    ``return_slots=True`` additionally returns the ``(P, K)`` serving
+    slot per pass (−1 where the ring was empty) — what
+    :func:`repro.isl.exchange.oracle_exchange` replays contact payers
+    from.
     """
     from repro.core.energy import clamp_battery
     from repro.sim.device_sim import (ACTION_FAILED, ACTION_FAULT,
@@ -337,8 +345,15 @@ def oracle_actions(fleet) -> np.ndarray:
                             * fleet.budget.plane.pass_duration_s)
     reserve = np.float32(cfg.reserve_j)
     has_epi = scn is not None and scn.epidemic is not None
+    # ISL exchange charge (repro.isl): same order as the device scan —
+    # train drain, recharge, then the contact push's transmit energy
+    exch = getattr(fleet, "exchange", None)
+    ex_on = bool(getattr(fleet, "_ex_on", False))
+    e_isl = np.float32(getattr(fleet, "_ex_energy_j", 0.0))
+    L, avg_every = fleet.rev_len, int(cfg.avg_every)
 
     actions = np.zeros((P, K), np.int32)
+    slots = np.full((P, K), -1, np.int32)
     for p in range(P):
         ttl = np.zeros((M,), np.int64)
         for k in range(K):
@@ -364,6 +379,8 @@ def oracle_actions(fleet) -> np.ndarray:
             else:
                 actions[p, k] = (ACTION_SHED if kept[p, slot] < 1.0
                                  else ACTION_TRAINED)
+            if served:
+                slots[p, k] = slot
             if fail:
                 failed[p, slot] = True
             if trains:
@@ -377,7 +394,17 @@ def oracle_actions(fleet) -> np.ndarray:
                                 recharge_j, np.float32(0.0))
                 battery[p] = clamp_battery(battery[p] + gain,
                                            np.float32(cfg.battery_j))
-    return actions
+            if ex_on and served and not fail:
+                if exch.mode == "async":
+                    push = bool(exch.contact.open_at(k))
+                else:
+                    push = (avg_every > 0 and (k + 1) % L == 0
+                            and ((k + 1) // L) % avg_every == 0)
+                if push:
+                    battery[p, slot] = clamp_battery(
+                        battery[p, slot] - e_isl,
+                        np.float32(cfg.battery_j))
+    return (actions, slots) if return_slots else actions
 
 
 # --------------------------------------------------------------------------

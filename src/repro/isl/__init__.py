@@ -1,0 +1,30 @@
+"""ISL comms subsystem: bandwidth-limited, compressed,
+staleness-tolerant inter-plane exchange, planned as a problem-(13)
+resource.
+
+* :mod:`repro.isl.link` — contact windows, rates, capacities, transmit
+  energy (modular arithmetic over the pass index; horizon-free).
+* :mod:`repro.isl.codec` — delta-checkpoint compression with error
+  feedback and exact wire-bit metering.
+* :mod:`repro.isl.exchange` — the in-scan async gossip / sync codec
+  steps, battery charging, and the NumPy host-prefix oracle.
+
+``python -m repro.isl`` runs the subsystem smoke (contact schedule vs
+oracle, sync parity, async exchange under compression).
+"""
+from repro.isl.codec import (CodecConfig, codec_label, delta_payload_bits,
+                             encode_delta, residual_init)
+from repro.isl.exchange import (EXCHANGE_MODES, ExchangeConfig,
+                                ExchangeState, async_gossip_step,
+                                exchange_events, exchange_init,
+                                null_exchange_state, oracle_exchange,
+                                staleness_weight, sync_exchange_step)
+from repro.isl.link import ContactConfig
+
+__all__ = [
+    "CodecConfig", "ContactConfig", "EXCHANGE_MODES", "ExchangeConfig",
+    "ExchangeState", "async_gossip_step", "codec_label",
+    "delta_payload_bits", "encode_delta", "exchange_events",
+    "exchange_init", "null_exchange_state", "oracle_exchange",
+    "residual_init", "staleness_weight", "sync_exchange_step",
+]

@@ -1,0 +1,125 @@
+"""``python -m repro.isl``: the ISL comms subsystem smoke, for CI.
+
+Forces a 2-device CPU topology (when none is configured) BEFORE jax
+initializes — the exchange's cross-plane gather and all-reduce must run
+over a real multi-device mesh.  Asserts, on a small 2-plane fleet:
+
+1. codec bit metering is monotone (none > int8 > top-k 10% > top-k 1%);
+2. a ``mode="sync"``, ``scheme="none"`` exchange reproduces the legacy
+   free barrier bit-for-bit (actions + final checkpoints) while
+   metering its wire bits — the parity default;
+3. an async compressed (top-k) gossip exchange matches its NumPy
+   host-prefix oracles bit-exactly: every action, and every contact's
+   ``{t, slot, bits, e_isl_j, staleness, weight}`` row;
+4. losses stay finite under gossip, the battery meter moved, and the
+   ≤-1-host-sync-per-revolution contract holds throughout.
+
+Env knobs (small-machine CI): ``REPRO_ISL_SMOKE_SATS`` (default 4),
+``REPRO_ISL_SMOKE_PLANES`` (default 2), ``REPRO_ISL_SMOKE_REVS``
+(default 2).
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=2").strip()
+
+
+def _smoke(n_sats: int = 4, n_planes: int = 2,
+           n_revolutions: int = 2) -> None:       # pragma: no cover
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.energy import PassBudget
+    from repro.core.orbits import OrbitalPlane
+    from repro.core.sl_step import autoencoder_adapter
+    from repro.fleet.engine import FleetConfig, FleetEngine
+    from repro.fleet.scenarios import oracle_actions
+    from repro.isl import (CodecConfig, ContactConfig, ExchangeConfig,
+                           codec_label, delta_payload_bits,
+                           exchange_events, oracle_exchange)
+    from repro.obs.timeline import timeline_summary
+    from repro.sim.data import DeviceImageryShards
+
+    shards = DeviceImageryShards(img=32, batch=4)
+    adapter = autoencoder_adapter(cut=5, img=32)
+    budget = PassBudget(plane=OrbitalPlane(n_sats=n_sats), n_items=4e6)
+    base = dict(n_planes=n_planes, n_revolutions=n_revolutions,
+                max_steps_per_pass=2, seed=0)
+    t0 = time.time()
+
+    # 1 ---- codec metering is monotone ---------------------------------
+    pa, pb = adapter.init(jax.random.key(0))
+    codecs = [CodecConfig("none"), CodecConfig("int8"),
+              CodecConfig("topk", topk_ratio=0.10),
+              CodecConfig("topk", topk_ratio=0.01)]
+    bits = [delta_payload_bits((pa, pb), c) for c in codecs]
+    labels = [codec_label(c) for c in codecs]
+    assert bits == sorted(bits, reverse=True) and bits[-1] > 0, \
+        dict(zip(labels, bits))
+    print("isl: payload bits " +
+          " > ".join(f"{l}={b:.3g}" for l, b in zip(labels, bits)))
+
+    # 2 ---- sync scheme="none" == the legacy free barrier --------------
+    legacy = FleetEngine(adapter, budget, shards,
+                         FleetConfig(avg_every=1, **base))
+    res_l = legacy.run()
+    syncf = FleetEngine(adapter, budget, shards, FleetConfig(
+        avg_every=1, exchange=ExchangeConfig(mode="sync"), **base))
+    expect_sync = oracle_exchange(syncf)
+    res_s = syncf.run()
+    np.testing.assert_array_equal(res_l.action, res_s.action)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        (res_l.state.params_a, res_l.state.params_b),
+        (res_s.state.params_a, res_s.state.params_b))
+    got_sync = exchange_events(syncf.recorder)
+    assert got_sync["t"].size == expect_sync["t"].size > 0
+    for col in ("t", "slot", "bits", "e_isl_j", "staleness", "weight"):
+        np.testing.assert_array_equal(got_sync[col], expect_sync[col], col)
+    s = res_s.summary()
+    assert s["ISL_exchange_bits"] > 0 and s["ISL_exchange_J"] > 0, s
+    assert res_l.summary()["ISL_exchange_bits"] == 0.0
+    assert syncf.traces == 1 and syncf.host_syncs <= n_revolutions
+    print(f"isl: sync/none == legacy barrier (checkpoints bit-exact), "
+          f"metered {s['ISL_exchange_bits']:.3g} bits / "
+          f"{s['ISL_exchange_J']:.2e} J")
+
+    # 3 ---- async compressed gossip vs the host-prefix oracles ---------
+    af = FleetEngine(adapter, budget, shards, FleetConfig(
+        avg_every=0, exchange=ExchangeConfig(
+            mode="async", codec=CodecConfig("topk", topk_ratio=0.01),
+            contact=ContactConfig(period=2, offsets=(1,)),
+            mix=0.5, staleness_lam=0.1), **base))
+    expect_act = oracle_actions(af)
+    expect_ex = oracle_exchange(af)
+    res_a = af.run(stream_telemetry=True)
+    np.testing.assert_array_equal(res_a.action, expect_act)
+    got = exchange_events(af.recorder)
+    assert got["t"].size == expect_ex["t"].size > 0
+    for col in ("t", "slot", "bits", "e_isl_j", "staleness", "weight"):
+        np.testing.assert_array_equal(got[col], expect_ex[col], col)
+    finite = res_a.loss[np.isfinite(res_a.loss)]
+    assert finite.size > 0 and np.isfinite(finite).all()
+    assert res_a.isl_bits.sum() > 0 and res_a.isl_e_j.sum() > 0
+    assert int(res_a.isl_contacts.sum()) == expect_ex["t"].size * n_planes
+    assert af.traces == 1 and af.host_syncs <= n_revolutions
+    print(f"isl: async top-k 1% gossip: {expect_ex['t'].size} contacts, "
+          f"action + exchange oracle parity bit-exact, "
+          f"{float(res_a.isl_bits.sum()):.3g} bits / "
+          f"{float(res_a.isl_e_j.sum()):.2e} J over ISL")
+    print("  " + timeline_summary(af.recorder.events())
+          .replace("\n", "\n  "))
+    print(f"isl: smoke OK ({time.time() - t0:.1f}s, "
+          f"{len(jax.devices())} device(s))")
+
+
+if __name__ == "__main__":                          # pragma: no cover
+    _smoke(n_sats=int(os.environ.get("REPRO_ISL_SMOKE_SATS", "4")),
+           n_planes=int(os.environ.get("REPRO_ISL_SMOKE_PLANES", "2")),
+           n_revolutions=int(os.environ.get("REPRO_ISL_SMOKE_REVS", "2")))

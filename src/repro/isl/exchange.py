@@ -1,0 +1,397 @@
+"""Asynchronous, metered inter-plane exchange inside the fleet scan.
+
+The fleet's legacy inter-plane "ISL" was a free, instantaneous
+full-float :func:`~repro.fleet.engine.average_planes` barrier at
+revolution boundaries.  This module replaces it with a *modeled* link:
+
+* **async gossip** (``mode="async"``, SFL-LEO style) — at every
+  contact window (:class:`~repro.isl.link.ContactConfig`), each plane
+  pushes its compressed checkpoint delta
+  (:mod:`repro.isl.codec`) to the contacted neighbor and merges what it
+  received with a staleness-discounted weight
+  ``mix / (1 + lam * staleness)`` — no barrier, no revolution
+  alignment, valid beyond any precomputed horizon;
+* **sync codec** (``mode="sync"``) — the familiar revolution-boundary
+  aggregation, but exchanging compressed delta reconstructions instead
+  of free full-float checkpoints (with ``scheme="none"`` it reduces
+  bit-for-bit to the legacy barrier — the parity default).
+
+Either way the payload is *charged*: the push's transmit energy
+``isl_pw * bits / rate`` drains the serving satellite's battery through
+the SAME :class:`~repro.sim.energy_state.EnergyState` training and
+serving share, a payload larger than the contact's ``rate * window_s``
+capacity simply does not transfer, and the amortized per-pass bit
+volume feeds the planner's problem-(13) ``d_isl_bits`` term
+(:func:`repro.sim.device_sim.measure_and_plan` ``isl_extra_bits=``), so
+choosing a codec changes the *planned* time/energy allocation, not just
+a counter.
+
+Everything the scan executes lives in :func:`async_gossip_step` /
+:func:`sync_exchange_step` (jnp-pure — guarded by
+``scripts/lint_scan_purity.py``); :func:`oracle_exchange` replays every
+contact/merge decision (pass, partner offset, paying slot, wire bits,
+drained joules, staleness, merge weight) in NumPy, bit-exactly, for the
+precomputed horizon — the same host-prefix discipline as
+:func:`repro.fleet.scenarios.oracle_actions`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import clamp_battery
+from repro.obs.ring import EV_EXCHANGE, record as ring_record
+from repro.isl.codec import (CodecConfig, delta_payload_bits, encode_delta,
+                             residual_init)
+from repro.isl.link import ContactConfig
+
+EXCHANGE_MODES = ("sync", "async")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeConfig:
+    """How the fleet's planes exchange checkpoints over the ISL.
+
+    ``mode="sync"`` keeps the revolution-boundary aggregation cadence
+    (``FleetConfig.avg_every``) but routes it through the codec and the
+    meter; ``mode="async"`` replaces the barrier with contact-window
+    gossip.  ``mix`` is the merge weight applied to a received delta at
+    zero staleness; ``staleness_lam`` discounts it as
+    ``mix / (1 + lam * s)`` where ``s`` is how many passes the sender's
+    delta accumulated since its previous push (SFL-LEO style
+    staleness tolerance).
+    """
+
+    mode: str = "async"
+    codec: CodecConfig = CodecConfig()
+    contact: ContactConfig = ContactConfig()
+    mix: float = 0.5
+    staleness_lam: float = 0.1
+
+    def __post_init__(self):
+        if self.mode not in EXCHANGE_MODES:
+            raise ValueError(f"unknown exchange mode {self.mode!r}; "
+                             f"expected one of {EXCHANGE_MODES}")
+        if not 0.0 < self.mix <= 1.0:
+            raise ValueError(f"mix must be in (0, 1], got {self.mix}")
+        if self.staleness_lam < 0.0:
+            raise ValueError(f"staleness_lam must be >= 0, "
+                             f"got {self.staleness_lam}")
+
+    def mean_contacts_per_pass(self, rev_len: int, avg_every: int) -> float:
+        """Amortized exchange frequency — what scales the per-push wire
+        bits into the planner's per-pass ``d_isl_bits`` surcharge."""
+        if self.mode == "async":
+            return 1.0 / float(self.contact.period)
+        if avg_every <= 0:
+            return 0.0
+        return 1.0 / float(avg_every * rev_len)
+
+
+class ExchangeState(NamedTuple):
+    """The exchange's scan-carry state, ``(P, ...)``-leading.
+
+    ``anchor`` is each plane's last *pushed* checkpoint (the reference
+    its next delta is taken against); ``residual`` the error-feedback
+    carry of the codec; ``last_k`` the pass of the last successful
+    push (staleness = current pass − ``last_k``); ``bits`` / ``e_j`` /
+    ``n_contacts`` the cumulative wire meter.
+    """
+
+    anchor: Any        # ((params_a, params_b))-shaped pytree
+    residual: Any      # same tree, fp32 error-feedback carry
+    last_k: Any        # (P,) int32
+    bits: Any          # (P,) float32 cumulative pushed wire bits
+    e_j: Any           # (P,) float32 cumulative ISL transmit joules
+    n_contacts: Any    # (P,) int32 successful pushes
+
+
+def exchange_init(params_tree, n_planes: int) -> ExchangeState:
+    """Fresh exchange state for fleet-shaped (``(P, ...)``-leading)
+    ``params_tree = (params_a, params_b)``; anchors start at the
+    current checkpoint (first delta = training since run start)."""
+    return ExchangeState(
+        anchor=jax.tree.map(jnp.array, params_tree),
+        residual=residual_init(params_tree),
+        last_k=jnp.zeros((n_planes,), jnp.int32),
+        bits=jnp.zeros((n_planes,), jnp.float32),
+        e_j=jnp.zeros((n_planes,), jnp.float32),
+        n_contacts=jnp.zeros((n_planes,), jnp.int32))
+
+
+def null_exchange_state(n_planes: int) -> ExchangeState:
+    """The disabled-exchange carry (empty trees, zero meters) — keeps
+    the scan signature uniform whether or not an exchange is wired."""
+    return ExchangeState(
+        anchor=(), residual=(),
+        last_k=jnp.zeros((n_planes,), jnp.int32),
+        bits=jnp.zeros((n_planes,), jnp.float32),
+        e_j=jnp.zeros((n_planes,), jnp.float32),
+        n_contacts=jnp.zeros((n_planes,), jnp.int32))
+
+
+def staleness_weight(stale, mix: float, lam: float, xp=np):
+    """THE merge-weight rule ``mix / (1 + lam * s)`` — float32 end to
+    end, shared verbatim (via ``xp=jnp``) by the device scan and the
+    NumPy oracle so recorded weights replay bit-exactly."""
+    s = xp.asarray(stale, xp.float32)
+    return xp.float32(mix) / (xp.float32(1.0) + xp.float32(lam) * s)
+
+
+def _encode_planes(codec: CodecConfig, params, anchor, residual):
+    """Delta-encode every plane (vmap over the leading plane axis)."""
+    return jax.vmap(
+        lambda p, a, r: encode_delta(p, a, r, codec))(
+            params, anchor, residual)
+
+
+def _tree_where(do, new, old):
+    return jax.tree.map(lambda a, b: jnp.where(do, a, b), new, old)
+
+
+def _charge(energy, slot, drain, cap):
+    """Drain ``drain[p]`` joules from plane ``p``'s serving slot —
+    subtract-then-clamp on the whole (P, M) battery (untouched entries
+    subtract exactly 0.0), mirrored scalar-wise by the oracle."""
+    M = energy.battery_j.shape[-1]
+    hit = (jnp.arange(M, dtype=jnp.int32)[None, :]
+           == jnp.clip(slot, 0, M - 1)[:, None])
+    d2 = jnp.where(hit, drain[:, None], jnp.float32(0.0))
+    return energy._replace(
+        battery_j=clamp_battery(energy.battery_j - d2, cap),
+        energy_spent_j=energy.energy_spent_j + d2)
+
+
+def async_gossip_step(exch: ExchangeConfig, state, ex: ExchangeState,
+                      energy, ring, k, sat, action, *, wire_bits: float,
+                      e_push_j: float, battery_cap: float, n_planes: int,
+                      action_failed: int):
+    """One contact-window attempt at pass ``k`` — runs INSIDE the
+    fleet's jitted scan (jnp-pure; lint-guarded), every pass.
+
+    When the window is shut (``open_at(k)`` False) the step is a traced
+    no-op: the same program, nothing written.  When open: every plane
+    simultaneously (1) snapshots + delta-encodes its checkpoint against
+    its anchor, (2) pushes to plane ``(p + offset) % P`` (a gather
+    along the plane axis — a collective permute under the fleet mesh),
+    (3) merges the received delta with the staleness-discounted weight,
+    (4) pays the transmit energy from its serving slot's battery (a
+    plane whose pass FAILED has no transmitter up — it still merges
+    received state, but drains nothing), and (5) records one
+    ``EV_EXCHANGE`` event per plane.
+    """
+    P = n_planes
+    cc = exch.contact
+    do = cc.open_at(k)
+    off = cc.offset_at(k, xp=jnp)
+    params = (state.params_a, state.params_b)
+    kept, resid = _encode_planes(exch.codec, params, ex.anchor,
+                                 ex.residual)
+    stale = (k - ex.last_k).astype(jnp.float32)              # (P,)
+    src = (jnp.arange(P, dtype=jnp.int32) - off) % P         # q <- (q-off)
+    recv = jax.tree.map(lambda x: jnp.take(x, src, axis=0), kept)
+    stale_r = jnp.take(stale, src)
+    w = staleness_weight(stale_r, exch.mix, exch.staleness_lam, xp=jnp)
+
+    def merge(x, d):
+        wd = w.reshape((P,) + (1,) * (d.ndim - 1))
+        return jnp.where(do, (x.astype(jnp.float32)
+                              + wd * d).astype(x.dtype), x)
+
+    state = state.replace(
+        params_a=jax.tree.map(merge, state.params_a, recv[0]),
+        params_b=jax.tree.map(merge, state.params_b, recv[1]))
+
+    pays = do & (action != action_failed)                    # (P,)
+    drain = jnp.where(pays, jnp.float32(e_push_j), jnp.float32(0.0))
+    energy = _charge(energy, sat, drain, jnp.float32(battery_cap))
+    ex = ExchangeState(
+        anchor=_tree_where(do, params, ex.anchor),
+        residual=_tree_where(do, resid, ex.residual),
+        last_k=jnp.where(do, k, ex.last_k),
+        bits=ex.bits + jnp.where(do, jnp.float32(wire_bits),
+                                 jnp.float32(0.0)),
+        e_j=ex.e_j + drain,
+        n_contacts=ex.n_contacts
+        + jnp.where(do, 1, 0).astype(jnp.int32))
+    slot_rec = jnp.where(pays, sat, -1).astype(jnp.int32)
+    ring = jax.vmap(lambda r, sl, dr, st, wq: ring_record(
+        r, EV_EXCHANGE, k, sl,
+        (jnp.float32(0.0), jnp.float32(wire_bits), dr, st, wq),
+        mask=do))(ring, slot_rec, drain, stale_r, w)
+    return state, ex, energy, ring
+
+
+def sync_exchange_step(exch: ExchangeConfig, aggregate_mode: str, state,
+                       ex: ExchangeState, energy, ring, k, sat, action,
+                       do, *, wire_bits: float, e_push_j: float,
+                       battery_cap: float, n_planes: int,
+                       action_failed: int):
+    """The revolution-boundary exchange, codec'd and metered — runs
+    INSIDE the fleet's jitted scan (jnp-pure; lint-guarded).
+
+    Optimizer state and any non-param float leaves aggregate exactly
+    like the legacy barrier (:func:`~repro.fleet.scenarios
+    .aggregate_planes`); the params travel as compressed delta
+    reconstructions ``anchor + delta_hat``.  With ``scheme="none"`` the
+    reconstruction IS the live checkpoint, so the merged state is
+    bit-for-bit the legacy barrier's — the parity default — while the
+    meter still charges the full-float wire bits.
+    """
+    from repro.fleet.scenarios import aggregate_planes
+
+    P = n_planes
+    params = (state.params_a, state.params_b)
+    stale = (k - ex.last_k).astype(jnp.float32)
+    if exch.codec.scheme == "none":
+        # exact delta -> reconstruction == live params: take the legacy
+        # aggregation verbatim (bit-exact parity incl. rounding)
+        resid = ex.residual
+        new_state = aggregate_planes(state, aggregate_mode)
+    else:
+        kept, resid = _encode_planes(exch.codec, params, ex.anchor,
+                                     ex.residual)
+        recon = jax.tree.map(lambda a, d: a + d, ex.anchor, kept)
+        merged = aggregate_planes(recon, aggregate_mode)
+        new_state = aggregate_planes(state, aggregate_mode).replace(
+            params_a=merged[0], params_b=merged[1])
+    state = _tree_where(do, new_state, state)
+
+    pays = do & (action != action_failed)
+    drain = jnp.where(pays, jnp.float32(e_push_j), jnp.float32(0.0))
+    energy = _charge(energy, sat, drain, jnp.float32(battery_cap))
+    new_anchor = (new_state.params_a, new_state.params_b)
+    ex = ExchangeState(
+        anchor=_tree_where(do, new_anchor, ex.anchor),
+        residual=_tree_where(do, resid, ex.residual),
+        last_k=jnp.where(do, k, ex.last_k),
+        bits=ex.bits + jnp.where(do, jnp.float32(wire_bits),
+                                 jnp.float32(0.0)),
+        e_j=ex.e_j + drain,
+        n_contacts=ex.n_contacts
+        + jnp.where(do, 1, 0).astype(jnp.int32))
+    w = jnp.full((P,), jnp.float32(1.0 / P))
+    slot_rec = jnp.where(pays, sat, -1).astype(jnp.int32)
+    ring = jax.vmap(lambda r, sl, dr, st, wq: ring_record(
+        r, EV_EXCHANGE, k, sl,
+        (jnp.float32(1.0), jnp.float32(wire_bits), dr, st, wq),
+        mask=do))(ring, slot_rec, drain, stale, w)
+    return state, ex, energy, ring
+
+
+# --------------------------------------------------------------------------
+# Host-prefix oracle (NumPy replay — the style of scenarios.oracle_actions)
+# --------------------------------------------------------------------------
+
+def oracle_exchange(fleet, n_passes: Optional[int] = None
+                    ) -> Dict[str, np.ndarray]:
+    """Replay every contact/merge decision of ``fleet``'s exchange for
+    the precomputed horizon, bit-exactly, before the fleet runs.
+
+    Returns one row per exchange event: ``t`` (pass index as recorded
+    in the ring), ``offset`` (plane-pair offset; 0 for sync),
+    ``aggregate`` (1.0 sync / 0.0 async) and per-plane ``slot`` (the
+    paying transmitter, −1 when that plane's pass FAILED), ``bits``,
+    ``e_isl_j`` (actual drained joules), ``staleness`` and ``weight`` —
+    exactly the ``EV_EXCHANGE`` payload columns the device ring must
+    contain, in order.  Covers both modes; an exchange-free fleet (or a
+    payload that exceeds the contact capacity) yields zero rows.
+    """
+    from repro.fleet.scenarios import oracle_actions
+    from repro.sim.device_sim import ACTION_FAILED
+
+    empty = {"t": np.zeros((0,), np.int32),
+             "offset": np.zeros((0,), np.int32),
+             "aggregate": np.zeros((0,), np.float32),
+             "slot": np.zeros((0, fleet.n_planes), np.int32),
+             "bits": np.zeros((0, fleet.n_planes), np.float32),
+             "e_isl_j": np.zeros((0, fleet.n_planes), np.float32),
+             "staleness": np.zeros((0, fleet.n_planes), np.float32),
+             "weight": np.zeros((0, fleet.n_planes), np.float32)}
+    exch = fleet.exchange
+    if exch is None or not fleet._ex_on:
+        return empty
+    actions, slots = oracle_actions(fleet, return_slots=True)
+    P = fleet.n_planes
+    K = actions.shape[1] if n_passes is None else min(int(n_passes),
+                                                      actions.shape[1])
+    bits_c = np.float32(fleet._ex_bits)
+    e_c = np.float32(fleet._ex_energy_j)
+    cc, L, avg_every = exch.contact, fleet.rev_len, fleet.cfg.avg_every
+    last_k = np.zeros((P,), np.int64)
+    rows = []
+
+    def row(t, off, agg, stale_r, weight, pay_k):
+        pays = actions[:, pay_k] != ACTION_FAILED
+        rows.append((t, off, agg,
+                     np.where(pays, slots[:, pay_k], -1).astype(np.int32),
+                     np.full((P,), bits_c, np.float32),
+                     np.where(pays, e_c, np.float32(0.0)),
+                     stale_r.astype(np.float32),
+                     weight.astype(np.float32)))
+
+    for k in range(K):
+        if exch.mode == "async":
+            if cc.open_at(k):
+                off = int(cc.offset_at(k))
+                src = (np.arange(P) - off) % P
+                stale_r = (k - last_k)[src]
+                w = staleness_weight(stale_r, exch.mix,
+                                     exch.staleness_lam, xp=np)
+                row(k, off, 0.0, stale_r, w, k)
+                last_k[:] = k
+        elif avg_every > 0:
+            kb = k + 1           # the boundary index rev_body records
+            if kb % L == 0 and (kb // L) % avg_every == 0:
+                stale = kb - last_k
+                w = np.full((P,), np.float32(1.0 / P))
+                row(kb, 0, 1.0, stale, w, k)
+                last_k[:] = kb
+    if not rows:
+        return empty
+    cols = list(zip(*rows))
+    return {"t": np.asarray(cols[0], np.int32),
+            "offset": np.asarray(cols[1], np.int32),
+            "aggregate": np.asarray(cols[2], np.float32),
+            "slot": np.stack(cols[3]),
+            "bits": np.stack(cols[4]),
+            "e_isl_j": np.stack(cols[5]),
+            "staleness": np.stack(cols[6]),
+            "weight": np.stack(cols[7])}
+
+
+def exchange_events(recorder) -> Dict[str, np.ndarray]:
+    """The device's ``EV_EXCHANGE`` rows from a
+    :class:`~repro.obs.ring.FlightRecorder`, reshaped to the oracle's
+    layout (one row per event time, per-plane columns) for direct
+    ``np.testing`` comparison."""
+    from repro.obs.ring import EXCHANGE_FIELDS
+
+    ev = recorder.events()
+    m = ev["kind"] == EV_EXCHANGE
+    t, plane = ev["t"][m], ev["plane"][m]
+    slot, pay = ev["slot"][m], ev["payload"][m]
+    times = np.unique(t)
+    P = int(plane.max()) + 1 if plane.size else 0
+    out = {"t": times.astype(np.int32),
+           "aggregate": np.zeros((times.size,), np.float32),
+           "slot": np.full((times.size, P), -1, np.int32),
+           "bits": np.zeros((times.size, P), np.float32),
+           "e_isl_j": np.zeros((times.size, P), np.float32),
+           "staleness": np.zeros((times.size, P), np.float32),
+           "weight": np.zeros((times.size, P), np.float32)}
+    col = {f: EXCHANGE_FIELDS.index(f) for f in EXCHANGE_FIELDS}
+    for i, tt in enumerate(times):
+        sel = t == tt
+        out["aggregate"][i] = pay[sel][0, col["aggregate"]]
+        for p, s, prow in zip(plane[sel], slot[sel], pay[sel]):
+            out["slot"][i, p] = s
+            out["bits"][i, p] = prow[col["bits"]]
+            out["e_isl_j"][i, p] = prow[col["e_isl_j"]]
+            out["staleness"][i, p] = prow[col["staleness"]]
+            out["weight"][i, p] = prow[col["weight"]]
+    return out

@@ -56,7 +56,7 @@ PASS_FIELDS = ("action", "battery_j", "loss", "n_steps", "kept_fraction",
                "fault", "sunlit", "n_infected")
 SERVE_FIELDS = ("arrivals", "battery_j", "served", "backlog", "tokens",
                 "trained", "sunlit", "capacity_req")
-EXCHANGE_FIELDS = ("aggregate",)
+EXCHANGE_FIELDS = ("aggregate", "bits", "e_isl_j", "staleness", "weight")
 FIELDS_BY_KIND = {EV_PASS: PASS_FIELDS, EV_SERVE: SERVE_FIELDS,
                   EV_EXCHANGE: EXCHANGE_FIELDS}
 

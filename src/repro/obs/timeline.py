@@ -22,8 +22,8 @@ from typing import Any, Dict, Iterable, List
 
 import numpy as np
 
-from .ring import (EV_EXCHANGE, EV_PASS, EV_SERVE, FIELDS_BY_KIND,
-                   PASS_FIELDS, SERVE_FIELDS)
+from .ring import (EV_EXCHANGE, EV_PASS, EV_SERVE, EXCHANGE_FIELDS,
+                   FIELDS_BY_KIND, PASS_FIELDS, SERVE_FIELDS)
 
 # Synthetic tids for plane-wide tracks (real slots are small ints).
 _TID_ECLIPSE = 9000
@@ -189,5 +189,13 @@ def timeline_summary(events: Dict[str, np.ndarray]) -> str:
                      f"{backlog[-1]:.0f} req")
     n_ex = int((kind == EV_EXCHANGE).sum())
     if n_ex:
-        lines.append(f"  plane exchanges: {n_ex}")
+        pay = events["payload"][kind == EV_EXCHANGE]
+        bits = pay[:, EXCHANGE_FIELDS.index("bits")]
+        e_isl = pay[:, EXCHANGE_FIELDS.index("e_isl_j")]
+        stale = pay[:, EXCHANGE_FIELDS.index("staleness")]
+        line = f"  plane exchanges: {n_ex}"
+        if bits.sum() > 0:      # metered (repro.isl); legacy barrier = 0
+            line += (f", {bits.sum():.3g} bits / {e_isl.sum():.3g} J "
+                     f"over ISL, max staleness {stale.max():.0f}")
+        lines.append(line)
     return "\n".join(lines)

@@ -190,7 +190,8 @@ def measure_and_plan(adapter: SplitAdapter, budget: PassBudget, batch_fn,
                      *, quantize_boundary: bool, params_a, n_sats,
                      ring_n: Optional[int] = None, dtx_bits=None,
                      max_steps_per_pass: Optional[int] = None,
-                     min_fraction: float = 0.05, plan=None):
+                     min_fraction: float = 0.05, plan=None,
+                     isl_extra_bits=0.0):
     """The shared construction block of every device engine.
 
     Measures the boundary payload shape-only (one ``eval_shape`` probe
@@ -208,8 +209,13 @@ def measure_and_plan(adapter: SplitAdapter, budget: PassBudget, batch_fn,
     abstract = jax.eval_shape(lambda: batch_fn(0, 0))
     batch_size = int(jax.tree.leaves(abstract)[0].shape[0])
     dtx = boundary_bits(adapter, abstract, quantize_boundary) / batch_size
+    # ``isl_extra_bits`` (scalar or per-instance array) adds the fleet
+    # exchange's amortized per-pass wire volume (repro.isl) on top of
+    # the segment-A handoff, so a codec choice reshapes the planned
+    # problem-(13) allocation, not just a telemetry counter
     costs = dataclasses.replace(adapter.costs(), dtx_bits=dtx,
-                                d_isl_bits=8.0 * tree_bytes(params_a))
+                                d_isl_bits=8.0 * tree_bytes(params_a)
+                                + isl_extra_bits)
     if plan is None:
         plan = plan_ring_passes(budget, costs, batch_size=batch_size,
                                 n_sats=n_sats, ring_n=ring_n,

@@ -1,4 +1,4 @@
-"""Gradient compression for the DP all-reduce (beyond-paper, §Perf).
+"""Gradient/delta compression with exact payload-bit metering.
 
 Two schemes, both with error feedback so compression error accumulates
 locally instead of biasing the update (Stich et al., memory-compensated
@@ -9,18 +9,40 @@ SGD):
   * int8 rows — the same symmetric per-row quantizer the SL boundary
     uses (kernels/split_quant), applied to gradients.
 
-In the paper's constellation these compress the *ISL gradient payload*
-(for the FL-hybrid extension the paper's conclusion sketches); in the
-scaled-out LM track they model all-reduce volume reduction.
+In the paper's constellation these compress the *ISL checkpoint-delta
+payload* (:mod:`repro.isl.codec` wires them into the fleet's
+inter-plane exchange, metered against the eq. (11)/(13) ISL terms); in
+the scaled-out LM track they model all-reduce volume reduction.
+
+Every scheme meters its wire payload exactly — not an estimate:
+
+  * top-k:  ``k * (value_bits + index_bits)`` per tensor, where
+    ``index_bits = ceil(log2(numel))`` (the position of each survivor);
+  * int8:   ``numel * 8 + scale_rows * 32`` per tensor (one fp32 scale
+    per quantized row);
+  * none:   ``numel * value_bits`` (the dense fp32 tensor).
+
+:func:`payload_bits` computes these from shapes alone (works on arrays
+and ``ShapeDtypeStruct``s), and both compressors surface the same
+number as ``compress_payload_bits`` in their metrics dict, so every
+layer that meters bits — codec, planner, telemetry — agrees to the bit.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+
+#: wire width of one kept value (fp32 mantissa payload of both schemes)
+VALUE_BITS = 32
+#: wire width of one int8 row scale (fp32)
+SCALE_BITS = 32
+
+SCHEMES = ("none", "topk", "int8")
 
 
 class ErrorFeedbackState(NamedTuple):
@@ -31,6 +53,68 @@ def ef_init(params) -> ErrorFeedbackState:
     return ErrorFeedbackState(
         jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
 
+
+# ------------------------------------------------------- bit accounting
+
+def _numel(leaf) -> int:
+    size = 1
+    for d in jnp.shape(leaf):
+        size *= int(d)
+    return size
+
+
+def index_bits(numel: int) -> int:
+    """Bits to address one entry of a ``numel``-element tensor."""
+    return max(1, math.ceil(math.log2(numel))) if numel > 1 else 1
+
+
+def topk_payload_bits(tree, ratio: float, value_bits: int = VALUE_BITS
+                      ) -> int:
+    """Exact top-k wire bits: ``k * (value_bits + index_bits)`` per
+    tensor, summed over the pytree (shape-only — no data needed)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = _numel(leaf)
+        k = max(1, int(n * ratio))
+        total += k * (value_bits + index_bits(n))
+    return total
+
+
+def int8_payload_bits(tree, scale_bits: int = SCALE_BITS) -> int:
+    """Exact int8-rows wire bits: ``numel * 8 + scale_rows * 32`` per
+    tensor (one fp32 scale per quantized row; tensors of rank < 2
+    quantize as a single row, matching :func:`_int8_one`)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = jnp.shape(leaf)
+        n = _numel(leaf)
+        rows = (n // int(shape[-1])) if (len(shape) >= 2 and n) else 1
+        total += n * 8 + rows * scale_bits
+    return total
+
+
+def payload_bits(tree, scheme: str = "none", *, topk_ratio: float = 0.01,
+                 value_bits: int = VALUE_BITS) -> int:
+    """Exact wire bits of one compressed pytree under ``scheme``."""
+    if scheme == "none":
+        return sum(_numel(leaf) * value_bits
+                   for leaf in jax.tree.leaves(tree))
+    if scheme == "topk":
+        return topk_payload_bits(tree, topk_ratio, value_bits)
+    if scheme == "int8":
+        return int8_payload_bits(tree)
+    raise ValueError(scheme)
+
+
+def _norms(kept, resid):
+    kept_norm = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                             for x in jax.tree.leaves(kept)))
+    res_norm = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                            for x in jax.tree.leaves(resid)))
+    return kept_norm, res_norm
+
+
+# ------------------------------------------------------------- schemes
 
 def _topk_one(g, ratio: float):
     flat = g.reshape(-1)
@@ -47,12 +131,12 @@ def topk_compress(grads, ef: ErrorFeedbackState, *, ratio: float = 0.01
                        grads, ef.residual)
     kept = jax.tree.map(lambda a: _topk_one(a, ratio), acc)
     resid = jax.tree.map(lambda a, kk: a - kk, acc, kept)
-    kept_norm = jnp.sqrt(sum(jnp.sum(jnp.square(x))
-                             for x in jax.tree.leaves(kept)))
-    res_norm = jnp.sqrt(sum(jnp.sum(jnp.square(x))
-                            for x in jax.tree.leaves(resid)))
+    kept_norm, res_norm = _norms(kept, resid)
     return kept, ErrorFeedbackState(resid), {
-        "compress_kept_norm": kept_norm, "compress_residual_norm": res_norm}
+        "compress_kept_norm": kept_norm,
+        "compress_residual_norm": res_norm,
+        "compress_payload_bits": jnp.float32(
+            topk_payload_bits(grads, ratio))}
 
 
 def _int8_one(g):
@@ -67,11 +151,18 @@ def _int8_one(g):
 
 def int8_compress(grads, ef: ErrorFeedbackState
                   ) -> Tuple[Any, ErrorFeedbackState, dict]:
+    """Returns (compressed_grads, new_ef, metrics) — the same metrics
+    contract as :func:`topk_compress` (kept/residual norms + exact
+    payload bits), so the codec layer meters every scheme uniformly."""
     acc = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
                        grads, ef.residual)
     deq = jax.tree.map(_int8_one, acc)
     resid = jax.tree.map(lambda a, d: a - d, acc, deq)
-    return deq, ErrorFeedbackState(resid), {}
+    kept_norm, res_norm = _norms(deq, resid)
+    return deq, ErrorFeedbackState(resid), {
+        "compress_kept_norm": kept_norm,
+        "compress_residual_norm": res_norm,
+        "compress_payload_bits": jnp.float32(int8_payload_bits(grads))}
 
 
 def compress(grads, ef, *, scheme: str = "none", topk_ratio: float = 0.01):

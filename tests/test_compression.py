@@ -1,0 +1,134 @@
+"""Gradient/delta compression (train/compression.py): error-feedback
+conservation, exact top-k sparsity, int8 round-trips, exact payload-bit
+metering, scheme validation, and a compressed-vs-uncompressed SGD
+convergence check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.compression import (ErrorFeedbackState, SCHEMES,
+                                     VALUE_BITS, compress, ef_init,
+                                     index_bits, int8_compress,
+                                     int8_payload_bits, payload_bits,
+                                     topk_compress, topk_payload_bits)
+
+
+def _grads(seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"w": jax.random.normal(k1, (8, 16)),
+            "b": jax.random.normal(k2, (16,))}
+
+
+# ------------------------------------------------------ error feedback
+
+@pytest.mark.parametrize("scheme", ["topk", "int8"])
+def test_error_feedback_conserves_mass(scheme):
+    """kept + residual == grads + prev_residual: compression error is
+    carried, never lost (the Stich et al. memory invariant)."""
+    grads = _grads()
+    ef = ef_init(grads)
+    # seed a nonzero prior residual so the accumulate path is exercised
+    ef = ErrorFeedbackState(jax.tree.map(lambda r: r + 0.25, ef.residual))
+    kept, ef2, metrics = compress(grads, ef, scheme=scheme,
+                                  topk_ratio=0.1)
+    acc = jax.tree.map(lambda g, r: g + r, grads, ef.residual)
+    total = jax.tree.map(lambda k_, r: k_ + r, kept, ef2.residual)
+    for a, t in zip(jax.tree.leaves(acc), jax.tree.leaves(total)):
+        np.testing.assert_allclose(np.asarray(t), np.asarray(a),
+                                   rtol=1e-6, atol=1e-6)
+    assert float(metrics["compress_residual_norm"]) >= 0.0
+
+
+def test_topk_keeps_exactly_k_entries():
+    grads = _grads(1)
+    kept, _, _ = topk_compress(grads, ef_init(grads), ratio=0.1)
+    for g, k_ in zip(jax.tree.leaves(grads), jax.tree.leaves(kept)):
+        k_expect = max(1, int(g.size * 0.1))
+        assert int((np.asarray(k_) != 0).sum()) == k_expect
+
+
+def test_int8_round_trip_tolerance():
+    """Symmetric per-row int8: error bounded by half a quantization
+    step per row."""
+    grads = _grads(2)
+    deq, ef2, _ = int8_compress(grads, ef_init(grads))
+    for g, d in zip(jax.tree.leaves(grads), jax.tree.leaves(deq)):
+        g, d = np.asarray(g), np.asarray(d)
+        step = np.abs(g).max() / 127.0
+        assert np.abs(g - d).max() <= step * 1.01
+
+
+def test_unknown_scheme_raises():
+    grads = _grads()
+    with pytest.raises(ValueError):
+        compress(grads, ef_init(grads), scheme="fft")
+    with pytest.raises(ValueError):
+        payload_bits(grads, "fft")
+    assert set(SCHEMES) == {"none", "topk", "int8"}
+
+
+# ------------------------------------------------------- bit metering
+
+def test_payload_bits_by_hand():
+    """The exact wire formulas on a known tree: top-k
+    ``k*(value+index)``, int8 ``numel*8 + rows*32``, none dense."""
+    tree = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}
+    # none: dense fp32
+    assert payload_bits(tree, "none") == (128 + 16) * VALUE_BITS
+    # topk at 10%: w keeps 12 of 128 (7 index bits), b 1 of 16 (4 bits)
+    assert index_bits(128) == 7 and index_bits(16) == 4
+    assert topk_payload_bits(tree, 0.1) == 12 * (32 + 7) + 1 * (32 + 4)
+    assert payload_bits(tree, "topk", topk_ratio=0.1) == \
+        topk_payload_bits(tree, 0.1)
+    # int8: one fp32 scale per row; rank-1 tensors quantize as one row
+    assert int8_payload_bits(tree) == (128 * 8 + 8 * 32) + (16 * 8 + 32)
+    # degenerate shapes
+    assert index_bits(1) == 1
+    assert topk_payload_bits({"s": jnp.zeros(())}, 0.5) == 1 * (32 + 1)
+
+
+def test_compressor_metrics_are_uniform_and_exact():
+    """Both schemes surface the same metrics keys, and the metered bits
+    equal the shape-only formula — the satellite-task fix for int8's
+    formerly empty metrics dict."""
+    grads = _grads(3)
+    for scheme, expect in [("topk", topk_payload_bits(grads, 0.05)),
+                           ("int8", int8_payload_bits(grads))]:
+        _, _, m = compress(grads, ef_init(grads), scheme=scheme,
+                           topk_ratio=0.05)
+        assert set(m) == {"compress_kept_norm", "compress_residual_norm",
+                          "compress_payload_bits"}
+        assert float(m["compress_payload_bits"]) == float(expect)
+        assert float(m["compress_kept_norm"]) > 0.0
+
+
+# ----------------------------------------------------- SGD convergence
+
+def test_compressed_sgd_converges_like_uncompressed():
+    """Top-k 30% with error feedback on a least-squares problem lands
+    within a modest factor of plain SGD (and both actually descend)."""
+    key = jax.random.key(0)
+    X = jax.random.normal(key, (64, 10))
+    w_true = jnp.linspace(-1.0, 1.0, 10)
+    y = X @ w_true
+
+    def loss_fn(w):
+        return jnp.mean((X @ w - y) ** 2)
+
+    grad = jax.grad(loss_fn)
+
+    def train(scheme):
+        w = jnp.zeros((10,))
+        ef = ef_init({"w": w})
+        for _ in range(120):
+            g = {"w": grad(w)}
+            g, ef, _ = compress(g, ef, scheme=scheme, topk_ratio=0.3)
+            w = w - 0.05 * g["w"]
+        return float(loss_fn(w))
+
+    l0 = float(loss_fn(jnp.zeros((10,))))
+    plain, topk = train("none"), train("topk")
+    assert plain < 0.05 * l0
+    assert topk < 0.10 * l0
+    assert topk < 4.0 * plain + 1e-6

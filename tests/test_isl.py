@@ -1,0 +1,265 @@
+"""ISL comms subsystem (repro.isl): contact-window arithmetic, codec
+bit metering, exchange configuration, device-vs-host-oracle bit parity
+for async gossip and sync codec exchange, beyond-horizon contact
+continuation on chained runs, and the problem-(13) plan feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.energy import PassBudget
+from repro.core.linkbudget import ISLConfig, LinkConfig
+from repro.core.orbits import OrbitalPlane
+from repro.core.sl_step import autoencoder_adapter
+from repro.fleet import FleetConfig, FleetEngine, oracle_actions
+from repro.isl import (CodecConfig, ContactConfig, ExchangeConfig,
+                       codec_label, delta_payload_bits, encode_delta,
+                       exchange_events, oracle_exchange, residual_init,
+                       staleness_weight)
+from repro.obs.ring import EV_EXCHANGE
+from repro.sim.data import DeviceImageryShards
+from repro.sim.device_sim import ACTION_TRAINED
+
+SHARDS = DeviceImageryShards(img=32, batch=4)
+ADAPTER = autoencoder_adapter(cut=5, img=32)
+
+
+def _budget(n_sats=4, **kw):
+    return PassBudget(plane=OrbitalPlane(n_sats=n_sats), n_items=4e6, **kw)
+
+
+def _fleet(budget, **cfg_kw):
+    kw = dict(n_planes=2, n_revolutions=2, max_steps_per_pass=2, seed=0)
+    kw.update(cfg_kw)
+    return FleetEngine(ADAPTER, budget, SHARDS, FleetConfig(**kw))
+
+
+# ------------------------------------------------------- contact model
+
+def test_contact_config_schedule_arithmetic():
+    """open/offset/partner are pure modular arithmetic — Python ints,
+    NumPy arrays and traced scalars agree, beyond any horizon."""
+    cc = ContactConfig(period=3, phase=1, offsets=(1, 2))
+    opens = [bool(cc.open_at(k)) for k in range(7)]
+    assert opens == [False, False, True, False, False, True, False]
+    # contact 1 at k=2 uses offsets[1 % 2]=2, contact 2 at k=5 offset 1
+    assert int(cc.offset_at(2)) == 2 and int(cc.offset_at(5)) == 1
+    assert int(cc.partner(3, 2, n_planes=4)) == (3 + 2) % 4
+    assert cc.contacts_in(7) == 2 and cc.contacts_in(7, start=7) == 2
+    # traced: the same expression inside jit
+    assert bool(jax.jit(lambda k: cc.open_at(k))(5))
+    assert int(jax.jit(lambda k: cc.offset_at(k, xp=jnp))(5)) == 1
+    with pytest.raises(ValueError, match="period"):
+        ContactConfig(period=0)
+    with pytest.raises(ValueError, match="window"):
+        ContactConfig(window_s=0.0)
+    with pytest.raises(ValueError, match="offset"):
+        ContactConfig(offsets=())
+
+
+def test_contact_rates_capacity_energy():
+    isl = ISLConfig(rate_bps=1e6, tx_power_w=2.0)
+    cc = ContactConfig(window_s=0.5)
+    assert cc.rate_bps(isl) == 1e6
+    assert cc.capacity_bits(isl) == 5e5
+    # E = pw * bits / rate
+    assert cc.tx_energy_j(1e6, isl) == pytest.approx(2.0)
+    # with a distance + LinkConfig, the eq.-(8) Shannon rate applies
+    link = LinkConfig()
+    cs = ContactConfig(window_s=0.5, distance_m=1e6)
+    assert cs.rate_bps(isl, link) == pytest.approx(
+        link.rate_bps(2.0, 1e6))
+    assert cs.rate_bps(isl, None) == 1e6   # no link model -> fixed rate
+
+
+# -------------------------------------------------------------- codec
+
+def test_codec_labels_and_monotone_bits():
+    tree = {"w": jnp.zeros((32, 32)), "b": jnp.zeros((32,))}
+    cs = [CodecConfig("none"), CodecConfig("int8"),
+          CodecConfig("topk", topk_ratio=0.10),
+          CodecConfig("topk", topk_ratio=0.01)]
+    assert [codec_label(c) for c in cs] == \
+        ["none", "int8", "topk10pc", "topk1pc"]
+    bits = [delta_payload_bits(tree, c) for c in cs]
+    assert bits == sorted(bits, reverse=True) and bits[-1] > 0
+    with pytest.raises(ValueError, match="scheme"):
+        CodecConfig("fft")
+    with pytest.raises(ValueError, match="ratio"):
+        CodecConfig("topk", topk_ratio=0.0)
+
+
+def test_encode_delta_none_is_exact_and_ef_accumulates():
+    params = {"w": jnp.arange(8.0)}
+    anchor = {"w": jnp.zeros((8,))}
+    resid = residual_init(params)
+    kept, r2 = encode_delta(params, anchor, resid, CodecConfig("none"))
+    np.testing.assert_array_equal(np.asarray(kept["w"]),
+                                  np.arange(8.0, dtype=np.float32))
+    np.testing.assert_array_equal(np.asarray(r2["w"]), np.zeros(8))
+    # top-k at 1/8 keeps the largest entry; the rest rides the residual
+    kept, r2 = encode_delta(params, anchor, resid,
+                            CodecConfig("topk", topk_ratio=1 / 8))
+    assert int((np.asarray(kept["w"]) != 0).sum()) == 1
+    np.testing.assert_allclose(np.asarray(kept["w"] + r2["w"]),
+                               np.arange(8.0), rtol=1e-7)
+
+
+def test_exchange_config_validation_and_amortization():
+    with pytest.raises(ValueError, match="mode"):
+        ExchangeConfig(mode="carrier_pigeon")
+    with pytest.raises(ValueError, match="mix"):
+        ExchangeConfig(mix=0.0)
+    with pytest.raises(ValueError, match="staleness"):
+        ExchangeConfig(staleness_lam=-1.0)
+    a = ExchangeConfig(mode="async", contact=ContactConfig(period=4))
+    assert a.mean_contacts_per_pass(8, 1) == pytest.approx(0.25)
+    s = ExchangeConfig(mode="sync")
+    assert s.mean_contacts_per_pass(8, 2) == pytest.approx(1 / 16)
+    assert s.mean_contacts_per_pass(8, 0) == 0.0
+    # staleness weight: mix at s=0, discounted hyperbolically after
+    assert staleness_weight(0, 0.5, 0.1) == np.float32(0.5)
+    assert staleness_weight(10.0, 0.5, 0.1) == pytest.approx(0.25)
+
+
+# ------------------------------------------- device-vs-oracle parity
+
+def test_async_int8_gossip_matches_host_oracles():
+    """Every action and every contact row (t / paying slot / bits /
+    joules / staleness / merge weight) of an async int8 gossip fleet
+    replays bit-exactly on the host — the repro.isl analogue of the
+    degraded-ops action oracle."""
+    fleet = _fleet(_budget(), avg_every=0, exchange=ExchangeConfig(
+        mode="async", codec=CodecConfig("int8"),
+        contact=ContactConfig(period=2, offsets=(1,)),
+        mix=0.4, staleness_lam=0.2))
+    assert fleet._ex_on and fleet._ex_bits > 0
+    expect_act = oracle_actions(fleet)
+    expect_ex = oracle_exchange(fleet)
+    res = fleet.run()
+    np.testing.assert_array_equal(res.action, expect_act)
+    got = exchange_events(fleet.recorder)
+    assert got["t"].size == expect_ex["t"].size > 0
+    for col in ("t", "aggregate", "slot", "bits", "e_isl_j",
+                "staleness", "weight"):
+        np.testing.assert_array_equal(got[col], expect_ex[col], col)
+    # the meter moved, training stayed finite, sync contract held
+    assert float(res.isl_bits.sum()) > 0
+    assert float(res.isl_e_j.sum()) > 0
+    finite = res.loss[np.isfinite(res.loss)]
+    assert finite.size and np.isfinite(finite).all()
+    assert fleet.traces == 1
+    assert fleet.host_syncs <= fleet.cfg.n_revolutions
+
+
+def test_exchange_payload_flows_into_timeline():
+    """EV_EXCHANGE rows carry {bits, e_isl_j, staleness} through the
+    flight recorder into the chrome trace and the text summary."""
+    from repro.obs.timeline import timeline_summary, to_chrome_trace
+
+    fleet = _fleet(_budget(), n_revolutions=1, avg_every=1,
+                   exchange=ExchangeConfig(mode="sync"))
+    fleet.run()
+    ev = fleet.recorder.events()
+    assert int((ev["kind"] == EV_EXCHANGE).sum()) > 0
+    trace = to_chrome_trace(ev)
+    ex = [e for e in trace["traceEvents"]
+          if e.get("cat") == "exchange" and e["ph"] == "i"]
+    assert ex and all(e["args"]["bits"] > 0 for e in ex)
+    assert "bits" in timeline_summary(ev)
+
+
+def test_beyond_horizon_contacts_continue_on_chained_runs():
+    """Chained runs past the precomputed horizon keep exchanging on
+    schedule — the contact model is arithmetic on the absolute pass
+    index, not a precomputed table (mirrors the fold_in refresh
+    contract of failures/epidemics)."""
+    fleet = _fleet(_budget(), n_revolutions=1, avg_every=0,
+                   exchange=ExchangeConfig(
+                       mode="async",
+                       codec=CodecConfig("topk", topk_ratio=0.01),
+                       contact=ContactConfig(period=2)))
+    K = fleet.n_passes          # == the precomputed schedule horizon
+    assert K == fleet.schedule.n_passes
+    per_run = fleet.exchange.contact.contacts_in(K)
+    res1 = fleet.run()
+    assert int(res1.isl_contacts.sum()) == per_run * fleet.n_planes
+    res2 = fleet.run()          # passes [K, 2K): beyond the horizon
+    assert int(res2.isl_contacts.sum()) == \
+        (per_run + fleet.exchange.contact.contacts_in(K, start=K)) \
+        * fleet.n_planes
+    # same compiled program, one sync per dispatch
+    assert fleet.traces == 1 and fleet.host_syncs <= 2
+    # recorded contact times include the beyond-horizon opens, on
+    # schedule (the ring may have rotated out first-run events)
+    ev = fleet.recorder.events()
+    t_ex = set(np.unique(ev["t"][ev["kind"] == EV_EXCHANGE]).tolist())
+    beyond = {k for k in range(K, 2 * K)
+              if fleet.exchange.contact.open_at(k)}
+    assert beyond and beyond <= t_ex
+    # and training kept advancing out there
+    finite = res2.loss[np.isfinite(res2.loss)]
+    assert finite.size and np.isfinite(finite).all()
+
+
+# ----------------------------------------- problem-(13) plan feedback
+
+def test_plans_differ_across_compression_levels():
+    """The charged ISL bit volume is a planner input: compression level
+    changes the problem-(13) allocation, not just a counter
+    (acceptance criterion (c) at unit level)."""
+    plans = {}
+    for codec in (CodecConfig("none"),
+                  CodecConfig("topk", topk_ratio=0.01)):
+        f = _fleet(_budget(), n_revolutions=1, avg_every=0,
+                   exchange=ExchangeConfig(mode="async", codec=codec,
+                                           contact=ContactConfig()))
+        plans[codec.scheme] = f.plan
+    d_none = np.asarray(plans["none"].d_isl_bits)
+    d_topk = np.asarray(plans["topk"].d_isl_bits)
+    assert (d_none > d_topk).all()
+    e_none = np.asarray(plans["none"].e_isl_j)
+    e_topk = np.asarray(plans["topk"].e_isl_j)
+    assert (e_none > e_topk).all()
+    # time moves the same way (the per-pass ISL seconds can round away
+    # at f32 against a ~200 s pass, so non-strict)
+    assert (np.asarray(plans["none"].t_total_s)
+            >= np.asarray(plans["topk"].t_total_s)).all()
+
+
+def test_sync_topk_full_ratio_tracks_legacy_barrier():
+    """Top-k at ratio 1.0 keeps every entry, so the sync codec exchange
+    reduces to the legacy mean barrier up to reconstruction rounding
+    (anchor + (params - anchor) vs params)."""
+    legacy = _fleet(_budget(), n_revolutions=1, avg_every=1)
+    res_l = legacy.run()
+    f = _fleet(_budget(), n_revolutions=1, avg_every=1,
+               exchange=ExchangeConfig(
+                   mode="sync", codec=CodecConfig("topk",
+                                                  topk_ratio=1.0)))
+    res_s = f.run()
+    np.testing.assert_array_equal(res_l.action, res_s.action)
+    for a, b in zip(jax.tree.leaves((res_l.state.params_a,
+                                     res_l.state.params_b)),
+                    jax.tree.leaves((res_s.state.params_a,
+                                     res_s.state.params_b))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    assert float(res_s.isl_bits.sum()) > float(res_l.summary()
+                                               ["ISL_exchange_bits"])
+
+
+def test_over_capacity_payload_never_transfers():
+    """A payload larger than rate * window_s does not cross the link:
+    the exchange is disabled outright (bandwidth-limited, not merely
+    priced), and the oracle agrees there is nothing to replay."""
+    fleet = _fleet(_budget(), n_revolutions=1, avg_every=0,
+                   exchange=ExchangeConfig(
+                       mode="async", contact=ContactConfig(window_s=1e-6)))
+    assert not fleet._ex_on and fleet._ex_bits > fleet._ex_cap_bits
+    assert oracle_exchange(fleet)["t"].size == 0
+    res = fleet.run()
+    ev = fleet.recorder.events()
+    assert int((ev["kind"] == EV_EXCHANGE).sum()) == 0
+    assert float(res.isl_bits.sum()) == 0.0
+    assert (res.action == ACTION_TRAINED).any()
